@@ -1,0 +1,92 @@
+"""Figure 8 ablations: (a) two-level index, (b) evidence source,
+(c) document threshold tau, (d) sample rate, (e) evidence cluster K.
+"""
+from __future__ import annotations
+
+import csv
+from pathlib import Path
+
+from repro.core import Engine
+from repro.extract import OracleExtractor
+from repro.index.retriever import TwoLevelRetriever
+
+from .common import (BenchContext, Method, generate_queries, prf,
+                     result_row_set, truth_row_set)
+
+OUT = Path(__file__).parent / "out"
+
+
+def _score(ctx, corpus, queries, retriever, **engine_kw):
+    F = P = C = 0.0
+    for qi, q in enumerate(queries):
+        retr = retriever.fork() if hasattr(retriever, "fork") else retriever
+        eng = Engine(retr, OracleExtractor(corpus), seed=qi, **engine_kw)
+        res = eng.execute(q)
+        p, r, f1 = prf(result_row_set(q, res), truth_row_set(corpus, q))
+        F += f1; P += p; C += res.ledger.total_tokens
+    n = len(queries)
+    return round(F / n, 3), round(P / n, 3), round(C / n, 1)
+
+
+def run(ctx: BenchContext | None = None, quick: bool = False):
+    ctx = ctx or BenchContext()
+    OUT.mkdir(exist_ok=True)
+    corpus = ctx.corpus("wiki")
+    n_q = 3 if quick else 10
+    queries = generate_queries(corpus, "players", n_q, seed=93,
+                               min_filters=2, max_filters=4)
+    rows = []
+
+    # (a) two-level vs segment-only
+    for mode, label in [("quest", "two_level"), ("segment_only", "segment_only")]:
+        f1, p, c = _score(ctx, corpus, queries, ctx.retriever("wiki", mode))
+        rows.append({"ablation": "index", "variant": label, "f1": f1,
+                     "precision": p, "tokens": c})
+        print(f"[ablation-index] {label}: f1={f1} tok={c}", flush=True)
+
+    # (b) evidence source
+    for mode, label in [("quest", "doc_evidence"), ("no_evidence", "no_evidence"),
+                        ("llm_evidence", "llm_evidence")]:
+        f1, p, c = _score(ctx, corpus, queries, ctx.retriever("wiki", mode))
+        rows.append({"ablation": "evidence", "variant": label, "f1": f1,
+                     "precision": p, "tokens": c})
+        print(f"[ablation-evidence] {label}: f1={f1} tok={c}", flush=True)
+
+    # (c) tau sweep: fix tau manually around the adaptive value
+    adaptive = TwoLevelRetriever(corpus)
+    # run one query to let thresholds settle, then read adaptive tau
+    Engine(adaptive, OracleExtractor(corpus)).execute(queries[0])
+    tau0 = adaptive._tau.get("players", 1.2)
+    for delta in (-0.4, -0.2, 0.0, 0.2, 0.4):
+        class FixedTau(TwoLevelRetriever):
+            def finalize_thresholds(self, table, attrs, stats, _d=delta, _t=tau0):
+                super().finalize_thresholds(table, attrs, stats)
+                self._tau[table] = _t + _d
+        retr = FixedTau(corpus)
+        f1, p, c = _score(ctx, corpus, queries[: max(3, n_q // 2)], retr)
+        rows.append({"ablation": "tau", "variant": f"{tau0 + delta:.2f}",
+                     "f1": f1, "precision": p, "tokens": c})
+        print(f"[ablation-tau] tau={tau0+delta:.2f}: f1={f1} tok={c}", flush=True)
+
+    # (d) sample rate
+    for rate in (0.02, 0.05, 0.1, 0.2):
+        retr = TwoLevelRetriever(corpus)
+        f1, p, c = _score(ctx, corpus, queries[: max(3, n_q // 2)], retr,
+                          sample_rate=rate)
+        rows.append({"ablation": "sample_rate", "variant": str(rate),
+                     "f1": f1, "precision": p, "tokens": c})
+        print(f"[ablation-sample] rate={rate}: f1={f1} tok={c}", flush=True)
+
+    # (e) evidence cluster K
+    for k in (1, 2, 3, 5, 8):
+        retr = TwoLevelRetriever(corpus, evidence_k=k)
+        f1, p, c = _score(ctx, corpus, queries[: max(3, n_q // 2)], retr)
+        rows.append({"ablation": "cluster_k", "variant": str(k),
+                     "f1": f1, "precision": p, "tokens": c})
+        print(f"[ablation-k] k={k}: f1={f1} tok={c}", flush=True)
+
+    with open(OUT / "fig8_ablations.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows

@@ -1,0 +1,50 @@
+"""Table 2 (accuracy) + Table 3 (token cost & latency): QUEST vs baselines
+on the three corpora.
+"""
+from __future__ import annotations
+
+import csv
+from pathlib import Path
+
+from .common import (METHODS, N_QUERIES, BenchContext, derived_latency_s,
+                     generate_queries, prf, result_row_set, truth_row_set)
+
+TABLES = {"wiki": "players", "swde": "universities", "legal": "cases"}
+OUT = Path(__file__).parent / "out"
+
+
+def run(ctx: BenchContext | None = None, quick: bool = False):
+    ctx = ctx or BenchContext()
+    OUT.mkdir(exist_ok=True)
+    rows = []
+    for corpus_name, table in TABLES.items():
+        corpus = ctx.corpus(corpus_name)
+        n_q = 3 if quick else N_QUERIES[corpus_name]
+        queries = generate_queries(corpus, table, n_q, seed=11)
+        n_docs = len(corpus.tables[table])
+        for method in METHODS:
+            P = R = F = C = W = 0.0
+            for qi, q in enumerate(queries):
+                res = ctx.run_query(corpus_name, method, q, seed=qi)
+                p, r, f1 = prf(result_row_set(q, res), truth_row_set(corpus, q))
+                P += p; R += r; F += f1
+                C += res.ledger.total_tokens
+                W += res.ledger.wall_time_s
+            n = len(queries)
+            rows.append({
+                "dataset": corpus_name, "method": method.name,
+                "precision": round(P / n, 3), "recall": round(R / n, 3),
+                "f1": round(F / n, 3),
+                "tokens_per_doc": round(C / n / n_docs, 1),
+                "tokens_per_query": round(C / n, 1),
+                "latency_s_derived": round(derived_latency_s(C / n), 2),
+                "wall_s": round(W / n, 3),
+            })
+            print(f"[baselines] {corpus_name:6s} {method.name:9s} "
+                  f"F1={rows[-1]['f1']:.3f} tok/doc={rows[-1]['tokens_per_doc']}",
+                  flush=True)
+    with open(OUT / "table2_table3_baselines.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows

@@ -1,0 +1,43 @@
+"""Figures 4/5: accuracy and cost grouped by filter count (C1: 1 filter,
+C2: 2-3 filters, C3: 4+), per method.
+"""
+from __future__ import annotations
+
+import csv
+from pathlib import Path
+
+from .common import (METHODS, BenchContext, generate_queries, prf,
+                     result_row_set, truth_row_set)
+
+OUT = Path(__file__).parent / "out"
+GROUPS = {"C1": (1, 1), "C2": (2, 3), "C3": (4, 5)}
+
+
+def run(ctx: BenchContext | None = None, quick: bool = False):
+    ctx = ctx or BenchContext()
+    OUT.mkdir(exist_ok=True)
+    corpus_name, table = "wiki", "players"
+    corpus = ctx.corpus(corpus_name)
+    rows = []
+    n_per_group = 3 if quick else 8
+    for gname, (lo, hi) in GROUPS.items():
+        queries = generate_queries(corpus, table, n_per_group, seed=23 + lo,
+                                   min_filters=lo, max_filters=hi)
+        for method in METHODS:
+            F = C = 0.0
+            for qi, q in enumerate(queries):
+                res = ctx.run_query(corpus_name, method, q, seed=qi)
+                _, _, f1 = prf(result_row_set(q, res), truth_row_set(corpus, q))
+                F += f1
+                C += res.ledger.total_tokens
+            n = len(queries)
+            rows.append({"group": gname, "method": method.name,
+                         "f1": round(F / n, 3),
+                         "tokens_per_query": round(C / n, 1)})
+            print(f"[filter-groups] {gname} {method.name:9s} F1={rows[-1]['f1']:.3f} "
+                  f"tok={rows[-1]['tokens_per_query']}", flush=True)
+    with open(OUT / "fig4_fig5_filter_groups.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows

@@ -1,0 +1,228 @@
+"""Figure 7: join evaluation.
+
+(a) two-table joins: QUEST (transform) vs Pushdown vs Optimal (true
+    selectivities + exhaustive plan choice), grouped by filter count (G1-G3)
+    and by realized IN-filter selectivity (E1-E3);
+(b) multi-table joins (players-teams-cities / players-teams-owners):
+    QUEST adaptive ordering vs Random edge order vs Pushdown vs Optimal.
+"""
+from __future__ import annotations
+
+import csv
+import random
+from pathlib import Path
+
+from repro.core import Engine, Filter, JoinEdge, Query, conj
+from repro.core.expr import evaluate_expr
+from repro.extract import OracleExtractor
+
+from .common import BenchContext, Method, prf
+
+OUT = Path(__file__).parent / "out"
+
+JOINS = {
+    ("players", "teams"): JoinEdge("players", "team_name", "teams", "team_name"),
+    ("teams", "cities"): JoinEdge("teams", "location", "cities", "city_name"),
+    ("teams", "owners"): JoinEdge("teams", "owner_name", "owners", "owner_name"),
+}
+NUMERIC = {
+    "players": [("age", 25, 40), ("all_stars", 2, 12), ("ppg", 8.0, 25.0)],
+    "teams": [("championships", 2, 15), ("founded", 1950, 1995),
+              ("arena_capacity", 16000, 21000)],
+    "cities": [("population", 100_000, 1_500_000), ("founded_year", 1800, 1900)],
+    "owners": [("net_worth", 3.0, 30.0), ("owner_age", 45, 80)],
+}
+
+
+def _rand_filters(rng, table, k):
+    out = []
+    for attr, lo, hi in rng.sample(NUMERIC[table], min(k, len(NUMERIC[table]))):
+        v = lo + (hi - lo) * rng.random()
+        if isinstance(lo, int):
+            v = int(v)
+        else:
+            v = round(v, 1)
+        out.append(Filter(attr, rng.choice([">", "<"]), v, table=table))
+    return out
+
+
+def make_join_queries(rng, n, *, tables=("players", "teams"), k_filters=(1, 2)):
+    edge = JOINS[tables]
+    out = []
+    for _ in range(n):
+        f1 = _rand_filters(rng, tables[0], rng.randint(*k_filters))
+        f2 = _rand_filters(rng, tables[1], rng.randint(*k_filters))
+        expr = conj(*(f1 + f2))
+        out.append(Query(tables=list(tables),
+                         select=[(tables[0], list(NUMERIC[tables[0]])[0][0])],
+                         where=expr, joins=[edge]))
+    return out
+
+
+def join_truth(corpus, query: Query):
+    """Ground-truth joined rows (docs tuples)."""
+    tabs = list(query.tables)
+    rows = [{tabs[0]: d} for d in corpus.truth_rows(tabs[0])]
+    for e in query.joins:
+        t1, a1, t2, a2 = e.left_table, e.left_attr, e.right_table, e.right_attr
+        if t1 not in rows[0] if rows else True:
+            t1, a1, t2, a2 = t2, a2, t1, a1
+        tr2 = corpus.truth_rows(t2)
+        new = []
+        for r in rows:
+            v = corpus.truth_rows(t1)[r[t1]][a1]
+            for d2, t in tr2.items():
+                if t[a2] == v:
+                    nr = dict(r)
+                    nr[t2] = d2
+                    new.append(nr)
+        rows = new
+    out = set()
+    for r in rows:
+        ok = True
+        for t, d in r.items():
+            truth = corpus.truth_rows(t)[d]
+            expr = query.where_for(t)
+            if expr is not None and not evaluate_expr(expr, truth):
+                ok = False
+                break
+        if ok:
+            out.add(tuple(sorted(r.items())))
+    return out
+
+
+def result_join_rows(res):
+    return {tuple(sorted(r["_docs"].items())) for r in res.rows}
+
+
+class OracleStatsEngine(Engine):
+    """`Optimal` baseline: the engine but with ground-truth selectivities."""
+
+    def __init__(self, *args, corpus=None, **kw):
+        super().__init__(*args, **kw)
+        self._corpus = corpus
+
+    def _prepare_table(self, query, table):
+        ctx = super()._prepare_table(query, table)
+        truth = self._corpus.truth_rows(table)
+
+        class TruthStats:
+            def __init__(s, inner):
+                s.inner = inner
+            def selectivity(s, flt):
+                vals = [t.get(flt.attr) for t in truth.values()]
+                sat = sum(1 for v in vals if flt.evaluate(v))
+                return max(0.01, min(0.99, sat / max(len(vals), 1)))
+            def in_filter_selectivity(s, attr, allowed):
+                vals = [t.get(attr) for t in truth.values()]
+                sat = sum(1 for v in vals if v in allowed)
+                return max(0.01, min(0.99, sat / max(len(vals), 1)))
+            def mean_cost(s, attr, default=500.0):
+                return s.inner.mean_cost(attr, default)
+            @property
+            def sampled_values(s):
+                return s.inner.sampled_values
+            def values(s, attr):
+                return s.inner.values(attr)
+
+        ctx.stats = TruthStats(ctx.stats)
+        return ctx
+
+
+def run(ctx: BenchContext | None = None, quick: bool = False):
+    ctx = ctx or BenchContext()
+    OUT.mkdir(exist_ok=True)
+    corpus = ctx.corpus("wiki")
+    rng = random.Random(71)
+    rows = []
+
+    def execute(query, variant, qi):
+        retr = ctx.retriever("wiki", "quest").fork()
+        kw = dict(seed=qi)
+        if variant == "Pushdown":
+            eng = Engine(retr, OracleExtractor(corpus), join_strategy="pushdown", **kw)
+        elif variant == "Optimal":
+            eng = OracleStatsEngine(retr, OracleExtractor(corpus), corpus=corpus, **kw)
+        else:
+            eng = Engine(retr, OracleExtractor(corpus), **kw)
+        return eng.execute(query)
+
+    # (a) two-table joins, grouped by #filters
+    groups = {"G1": (1, 1), "G2": (2, 2), "G3": (3, 3)}
+    sel_buckets = {"E1": [], "E2": [], "E3": []}
+    n_q = 2 if quick else 7
+    for gname, (lo, hi) in groups.items():
+        queries = make_join_queries(rng, n_q, k_filters=(lo, hi))
+        for variant in ("QUEST", "Pushdown", "Optimal"):
+            C = F = 0.0
+            for qi, q in enumerate(queries):
+                res = execute(q, variant, qi)
+                _, _, f1 = prf(result_join_rows(res), join_truth(corpus, q))
+                C += res.ledger.total_tokens
+                F += f1
+                if variant == "QUEST":
+                    # realized IN selectivity bucket
+                    surv = res.meta["survivors"]
+                    tt = "teams" if "teams" in surv else list(surv)[0]
+                    frac = surv.get(tt, 0) / max(len(corpus.truth_rows(tt)), 1)
+                    bucket = "E1" if frac < 0.3 else ("E2" if frac < 0.6 else "E3")
+                    sel_buckets[bucket].append((res.ledger.total_tokens, q, qi))
+            rows.append({"bench": "two_table", "group": gname, "variant": variant,
+                         "tokens_per_query": round(C / len(queries), 1),
+                         "f1": round(F / len(queries), 3)})
+            print(f"[join] {gname} {variant:9s} tok={rows[-1]['tokens_per_query']} "
+                  f"f1={rows[-1]['f1']}", flush=True)
+
+    # selectivity buckets: compare QUEST vs Pushdown on the same queries
+    for bname, items in sel_buckets.items():
+        if not items:
+            continue
+        Cq = sum(t for t, _, _ in items) / len(items)
+        Cp = 0.0
+        for _, q, qi in items:
+            Cp += execute(q, "Pushdown", qi).ledger.total_tokens
+        rows.append({"bench": "sel_bucket", "group": bname, "variant": "QUEST",
+                     "tokens_per_query": round(Cq, 1), "f1": None})
+        rows.append({"bench": "sel_bucket", "group": bname, "variant": "Pushdown",
+                     "tokens_per_query": round(Cp / len(items), 1), "f1": None})
+
+    # (b) multi-table joins (3 tables, 2 edges)
+    n_multi = 2 if quick else 5
+    multi_rows = []
+    for qi in range(n_multi):
+        f_p = _rand_filters(rng, "players", 1)
+        f_t = _rand_filters(rng, "teams", 1)
+        f_c = _rand_filters(rng, "cities", 1)
+        q = Query(tables=["players", "teams", "cities"],
+                  select=[("players", "age")],
+                  where=conj(*(f_p + f_t + f_c)),
+                  joins=[JOINS[("players", "teams")], JOINS[("teams", "cities")]])
+        for variant in ("QUEST", "Random", "Pushdown", "Optimal"):
+            if variant == "Random":
+                retr = ctx.retriever("wiki", "quest").fork()
+                eng = Engine(retr, OracleExtractor(corpus), seed=qi)
+                # random edge order: shuffle by overriding the chooser
+                eng._choose_first_edge = lambda query, ctxs: random.Random(qi).choice(list(query.joins))
+                res = eng.execute(q)
+            else:
+                res = execute(q, variant, qi)
+            _, _, f1 = prf(result_join_rows(res), join_truth(corpus, q))
+            multi_rows.append({"bench": "multi_table", "query": qi,
+                               "variant": variant,
+                               "tokens": res.ledger.total_tokens,
+                               "f1": round(f1, 3)})
+    # aggregate
+    for variant in ("QUEST", "Random", "Pushdown", "Optimal"):
+        sel = [r for r in multi_rows if r["variant"] == variant]
+        rows.append({"bench": "multi_table", "group": "all", "variant": variant,
+                     "tokens_per_query": round(sum(r["tokens"] for r in sel) / len(sel), 1),
+                     "f1": round(sum(r["f1"] for r in sel) / len(sel), 3)})
+        print(f"[join-multi] {variant:9s} tok={rows[-1]['tokens_per_query']}",
+              flush=True)
+
+    with open(OUT / "fig7_join.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["bench", "group", "variant",
+                                          "tokens_per_query", "f1"])
+        w.writeheader()
+        w.writerows(rows)
+    return rows

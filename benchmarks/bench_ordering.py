@@ -1,0 +1,80 @@
+"""Figure 6: filter-ordering strategies (Random / Selectivity / Average-cost
+/ Exhaust / QUEST): token cost per group + planner runtime scaling with the
+number of filters (QUEST n log n vs Exhaust n!).
+"""
+from __future__ import annotations
+
+import csv
+import random
+import time
+from pathlib import Path
+
+from repro.core.expr import And, Filter
+from repro.core.ordering import exhaustive_plan, plan_expression
+
+from .common import (BenchContext, generate_queries, prf, result_row_set,
+                     truth_row_set, Method)
+
+OUT = Path(__file__).parent / "out"
+STRATEGIES = ["random", "selectivity", "avg_cost", "exhaust", "quest"]
+GROUPS = {"C1": (1, 1), "C2": (2, 3), "C3": (4, 5)}
+
+
+def run(ctx: BenchContext | None = None, quick: bool = False):
+    ctx = ctx or BenchContext()
+    OUT.mkdir(exist_ok=True)
+    corpus_name, table = "wiki", "players"
+    corpus = ctx.corpus(corpus_name)
+    rows = []
+    n_per_group = 3 if quick else 8
+    for gname, (lo, hi) in GROUPS.items():
+        queries = generate_queries(corpus, table, n_per_group, seed=37 + lo,
+                                   min_filters=lo, max_filters=hi)
+        for strat in STRATEGIES:
+            method = Method(strat, "quest", strat)
+            C = F = 0.0
+            for qi, q in enumerate(queries):
+                res = ctx.run_query(corpus_name, method, q, seed=qi)
+                _, _, f1 = prf(result_row_set(q, res), truth_row_set(corpus, q))
+                C += res.ledger.total_tokens
+                F += f1
+            n = len(queries)
+            rows.append({"group": gname, "strategy": strat,
+                         "tokens_per_query": round(C / n, 1),
+                         "f1": round(F / n, 3)})
+            print(f"[ordering] {gname} {strat:11s} tok={rows[-1]['tokens_per_query']}",
+                  flush=True)
+    with open(OUT / "fig6_ordering_cost.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+
+    # planner runtime scaling (pure planning, no extraction)
+    scale_rows = []
+    rng = random.Random(5)
+    for n_f in ([2, 4, 6, 8] if quick else [2, 4, 6, 8, 9, 10]):
+        filters = tuple(Filter(f"a{i}", ">", 0) for i in range(n_f))
+        expr = And(filters)
+        costs = {f"a{i}": rng.uniform(10, 500) for i in range(n_f)}
+        sels = {f"a{i}": rng.uniform(0.05, 0.95) for i in range(n_f)}
+        cost_fn = lambda f: costs[f.attr]
+        sel_fn = lambda f: sels[f.attr]
+        t0 = time.time()
+        for _ in range(20):
+            plan_expression(expr, cost_fn, sel_fn)
+        t_quest = (time.time() - t0) / 20
+        t_ex = float("nan")
+        if n_f <= 9:
+            t0 = time.time()
+            exhaustive_plan(expr, cost_fn, sel_fn)
+            t_ex = time.time() - t0
+        scale_rows.append({"n_filters": n_f,
+                           "quest_ms": round(t_quest * 1e3, 4),
+                           "exhaust_ms": round(t_ex * 1e3, 4)})
+        print(f"[ordering-scale] n={n_f} quest={t_quest*1e3:.3f}ms "
+              f"exhaust={t_ex*1e3:.1f}ms", flush=True)
+    with open(OUT / "fig6_ordering_scaling.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=scale_rows[0].keys())
+        w.writeheader()
+        w.writerows(scale_rows)
+    return rows, scale_rows

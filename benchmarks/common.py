@@ -1,0 +1,208 @@
+"""Shared benchmark machinery: query generation (paper §5.1), method
+registry (QUEST + re-implemented baselines), and P/R/F1 evaluation.
+"""
+from __future__ import annotations
+
+import random
+import re
+import time
+from dataclasses import dataclass, field
+
+from repro.core import Engine, Filter, JoinEdge, Query, conj, disj
+from repro.core.expr import And, Or, evaluate_expr, iter_filters
+from repro.data.corpus import (CORPORA, make_legal_corpus, make_swde_corpus,
+                               make_wiki_corpus)
+from repro.data.tokens import count_tokens
+from repro.extract import OracleExtractor
+from repro.index.retriever import TwoLevelRetriever
+
+# paper Table 1 scale: #queries per dataset
+N_QUERIES = {"wiki": 25, "swde": 15, "legal": 10}
+
+
+# -------------------------------------------------------- query generation --
+
+
+def _numeric_filter(rng, table, attr, values):
+    vals = sorted(values)
+    q = vals[max(0, min(len(vals) - 1, int(rng.uniform(0.15, 0.85) * len(vals))))]
+    op = rng.choice([">", ">=", "<", "<=", "="])
+    if op == "=" and len(set(vals)) > 20:      # equality on near-unique ints
+        op = ">="
+    return Filter(attr, op, q, table=table)
+
+
+def _categorical_filter(rng, table, attr, values):
+    return Filter(attr, "=", rng.choice(sorted(set(values))), table=table)
+
+
+def generate_queries(corpus, table: str, n: int, *, seed: int = 0,
+                     min_filters=1, max_filters=5) -> list[Query]:
+    """Random single-table queries: conjunctions, disjunctions and mixed
+    trees in roughly equal shares (paper §5.1)."""
+    rng = random.Random(seed)
+    truth = corpus.truth_rows(table)
+    specs = corpus.attr_specs[table]
+    attrs = sorted(specs)
+    out = []
+    guard = 0
+    while len(out) < n and guard < n * 30:
+        guard += 1
+        k = rng.randint(min_filters, max_filters)
+        chosen = rng.sample(attrs, min(k, len(attrs)))
+        filters = []
+        for a in chosen:
+            vals = [t[a] for t in truth.values()]
+            if specs[a].kind in ("int", "float"):
+                filters.append(_numeric_filter(rng, table, a, vals))
+            else:
+                filters.append(_categorical_filter(rng, table, a, vals))
+        mode = rng.choice(["and", "or", "mix"])
+        if len(filters) == 1 or mode == "and":
+            expr = conj(*filters)
+        elif mode == "or":
+            expr = disj(*filters)
+        else:
+            split = rng.randint(1, len(filters) - 1)
+            left = conj(*filters[:split]) if split > 1 else filters[0]
+            right = disj(*filters[split:]) if len(filters) - split > 1 else filters[split]
+            expr = And((left, right)) if rng.random() < 0.5 else Or((left, right))
+        sel_attr = rng.choice([a for a in attrs if specs[a].kind == "str"] or attrs)
+        q = Query(tables=[table], select=[(table, sel_attr)], where=expr)
+        n_true = sum(1 for t in truth.values() if evaluate_expr(expr, t))
+        if 0 < n_true < len(truth):            # validated, non-degenerate
+            out.append(q)
+    return out
+
+
+def truth_row_set(corpus, query: Query):
+    """Ground-truth result rows as tuples of select-attr values + doc ids."""
+    table = query.tables[0]
+    rows = set()
+    for doc_id, t in corpus.truth_rows(table).items():
+        if query.where is None or evaluate_expr(query.where, t):
+            rows.add(tuple(t.get(a) for _, a in query.select) + (doc_id,))
+    return rows
+
+
+def result_row_set(query: Query, result):
+    rows = set()
+    for r in result.rows:
+        key = tuple(r[f"{t}.{a}"] for t, a in query.select)
+        rows.add(key + (r["_docs"][query.tables[0]],))
+    return rows
+
+
+def prf(pred: set, true: set):
+    tp = len(pred & true)
+    p = tp / max(len(pred), 1)
+    r = tp / max(len(true), 1)
+    return p, r, 2 * p * r / max(p + r, 1e-9)
+
+
+# --------------------------------------------------------------- methods ---
+
+
+class EvaExtractor(OracleExtractor):
+    """Evaporate-like: LLM synthesizes extraction *code* from sampled docs;
+    the code = the single most-frequent template pattern per attribute, so
+    any other phrasing is missed (paper: rule rigidity costs accuracy).
+    Query-time LLM cost ~ 0 (code generation charged at sampling)."""
+
+    def extract(self, doc_id, attr, segments):
+        text = " ".join(segments)
+        doc = self.corpus.docs[doc_id]
+        spec = self.corpus.spec(doc.domain, attr) or self._spec_for(attr)
+        if spec is None or not text:
+            return None, 0
+        # "synthesized code" knows only the first template's leading phrase
+        t0 = spec.templates[0]
+        probe = re.escape(t0.split("{}")[0].strip()[:24])
+        if probe and not re.search(probe, text):
+            return None, 0
+        return spec.parse(text), 0
+
+
+class ClosedIEExtractor(OracleExtractor):
+    """Fine-tuned-small-model stand-in: no LLM cost, weak cross-domain
+    generalization (fixed high miss/hallucination rates)."""
+
+    MISS = 0.45
+    HALL = 0.08
+
+    def extract(self, doc_id, attr, segments):
+        import hashlib
+        text = " ".join(segments)
+        doc = self.corpus.docs[doc_id]
+        spec = self.corpus.spec(doc.domain, attr) or self._spec_for(attr)
+        v = spec.parse(text) if (spec and text) else None
+        h = int.from_bytes(hashlib.blake2b(f"{doc_id}|{attr}|cie".encode(),
+                                           digest_size=4).digest(), "little")
+        r = (h % 10_000) / 10_000
+        if v is not None and r < self.MISS:
+            v = None
+        elif v is None and r < self.HALL:
+            v = 42
+        return v, 0
+
+
+@dataclass
+class Method:
+    name: str
+    retriever_mode: str
+    ordering: str
+    extractor_cls: type = OracleExtractor
+    join_strategy: str = "transform"
+
+
+METHODS = [
+    Method("QUEST", "quest", "quest"),
+    Method("Lotus", "fulldoc", "random"),
+    Method("RAG", "rag_topk", "random"),
+    Method("PZ", "rag_topk", "selectivity"),
+    Method("ZenDB", "segment_only", "selectivity", join_strategy="pushdown"),
+    Method("Eva", "fulldoc", "random", extractor_cls=EvaExtractor),
+    Method("ClosedIE", "fulldoc", "random", extractor_cls=ClosedIEExtractor),
+]
+
+
+class BenchContext:
+    """Caches corpora and per-mode retrievers (index builds are expensive)."""
+
+    def __init__(self):
+        self._corpora = {}
+        self._retrievers = {}
+
+    def corpus(self, name: str):
+        if name not in self._corpora:
+            self._corpora[name] = CORPORA[name]()
+        return self._corpora[name]
+
+    def retriever(self, corpus_name: str, mode: str):
+        key = (corpus_name, mode)
+        if key not in self._retrievers:
+            self._retrievers[key] = TwoLevelRetriever(self.corpus(corpus_name),
+                                                      mode=mode)
+        return self._retrievers[key]
+
+    def run_query(self, corpus_name: str, method: Method, query: Query,
+                  seed: int = 0, **engine_kw):
+        corpus = self.corpus(corpus_name)
+        retr = self.retriever(corpus_name, method.retriever_mode).fork()
+        extractor = method.extractor_cls(corpus)
+        eng = Engine(retr, extractor, ordering=method.ordering,
+                     join_strategy=method.join_strategy, seed=seed, **engine_kw)
+        t0 = time.time()
+        res = eng.execute(query)
+        res.ledger.wall_time_s = time.time() - t0
+        return res
+
+
+# serving-derived latency: tokens -> seconds at a nominal extraction-fleet
+# throughput (tokens/s/replica); see benchmarks/bench_roofline.py for the
+# roofline-backed value.
+NOMINAL_TOKENS_PER_S = 20_000.0
+
+
+def derived_latency_s(tokens: int) -> float:
+    return tokens / NOMINAL_TOKENS_PER_S

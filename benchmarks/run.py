@@ -1,0 +1,52 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+`PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]`
+Prints ``name,us_per_call,derived`` CSV lines per bench; detailed per-table
+CSVs land in benchmarks/out/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    default=bool(os.environ.get("REPRO_BENCH_QUICK")))
+    ap.add_argument("--only", default=None,
+                    help="baselines|filter_groups|ordering|join|ablations|kernels|roofline")
+    args = ap.parse_args()
+
+    from . import (bench_ablations, bench_baselines, bench_filter_groups,
+                   bench_join, bench_kernels, bench_ordering, bench_roofline)
+    from .common import BenchContext
+
+    ctx = BenchContext()
+    benches = {
+        "kernels": lambda: bench_kernels.run(quick=args.quick),
+        "ordering": lambda: bench_ordering.run(ctx, quick=args.quick),
+        "join": lambda: bench_join.run(ctx, quick=args.quick),
+        "filter_groups": lambda: bench_filter_groups.run(ctx, quick=args.quick),
+        "ablations": lambda: bench_ablations.run(ctx, quick=args.quick),
+        "baselines": lambda: bench_baselines.run(ctx, quick=args.quick),
+        "roofline": lambda: bench_roofline.run(quick=args.quick),
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            fn()
+            status = "ok"
+        except FileNotFoundError as e:
+            status = f"needs-dryrun({e})"
+        dt = time.time() - t0
+        print(f"bench_{name},{dt*1e6:.0f},{status}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke_config``.
+
+One module per assigned architecture; each exposes CONFIG (full, exercised
+only via the dry-run) and SMOKE (reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "whisper-medium": "whisper_medium",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "qwen3-32b": "qwen3_32b",
+    "deepseek-67b": "deepseek_67b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "grok-1-314b": "grok_1_314b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE

@@ -1,0 +1,9 @@
+from .expr import And, Filter, JoinEdge, Or, Query, conj, disj
+from .executor import Engine, QueryResult
+from .ledger import CostLedger
+from .ordering import exhaustive_plan, plan_expression, plan_fixed_order
+from .stats import SampleStats
+
+__all__ = ["Filter", "And", "Or", "Query", "JoinEdge", "conj", "disj",
+           "Engine", "QueryResult", "CostLedger", "SampleStats",
+           "plan_expression", "plan_fixed_order", "exhaustive_plan"]

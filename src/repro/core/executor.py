@@ -1,0 +1,384 @@
+"""QUEST execution engine: optimize-at-execution-time, per-document plans.
+
+Flow per table (paper §2.2):
+  1. document-level index -> candidate docs (generous tau);
+  2. sampling phase (~5%): full-document LLM extraction of all query attrs,
+     collecting selectivities, avg costs, evidence segments; thresholds
+     tau/gamma are tightened from the sample (index side);
+  3. per-document execution: each document gets its own filter order from
+     `plan_expression` using *its* index-retrieved segment token counts
+     (lazy extraction + short-circuit);
+  4. joins run through the join transformation (§3.2): pick a side by the
+     two-term cost model, execute it, convert the join into an IN filter on
+     the other side and let the orderer place it; multi-joins are ordered
+     adaptively (left-deep, re-planned after every join).
+
+The engine is LLM-agnostic: `extractor` and `retriever` are duck-typed
+(OracleExtractor for controlled experiments, ServedExtractor for the real
+JAX serving engine; see repro/extract).
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .expr import (And, Expr, Filter, JoinEdge, Or, Query, expr_attrs,
+                   filters_for_table, iter_filters)
+from .ledger import CostLedger
+from .ordering import PlanNode, plan_expression
+from .stats import SampleStats, sample_size
+
+PROMPT_OVERHEAD = 40      # instruction tokens per extraction call
+OUTPUT_TOKENS = 12        # answer tokens per extraction call
+
+
+@dataclass
+class TableContext:
+    name: str
+    doc_ids: list
+    where: Optional[Expr]
+    stats: SampleStats
+    extra_filters: list = field(default_factory=list)   # IN filters from joins
+
+    def full_expr(self) -> Optional[Expr]:
+        parts = list(self.extra_filters)
+        if self.where is not None:
+            parts.append(self.where)
+        if not parts:
+            return None
+        return parts[0] if len(parts) == 1 else And(tuple(parts))
+
+
+@dataclass
+class QueryResult:
+    rows: list
+    ledger: CostLedger
+    plans_sampled: dict = field(default_factory=dict)  # doc -> plan description
+    meta: dict = field(default_factory=dict)
+
+
+class Engine:
+    def __init__(self, retriever, extractor, *, sample_rate: float = 0.05,
+                 seed: int = 0, ordering: str = "quest",
+                 join_strategy: str = "transform",
+                 ledger: Optional[CostLedger] = None):
+        """ordering: quest | exhaust | avg_cost | selectivity | random
+        (paper §5.3 baselines). join_strategy: transform | pushdown
+        (paper §5.4: QUEST's join transformation vs. classical Plan (1))."""
+        self.retriever = retriever
+        self.extractor = extractor
+        self.sample_rate = sample_rate
+        self.rng = random.Random(seed)
+        self.ordering = ordering
+        self.join_strategy = join_strategy
+        self.ledger = ledger if ledger is not None else CostLedger()
+        self._cache: dict = {}          # (doc_id, attr) -> value
+        self._plan_log: dict = {}
+
+    # ------------------------------------------------------------ basics --
+
+    def _extract(self, doc_id, attr: str, *, phase: str = "query", table: str = None):
+        key = (doc_id, attr)
+        if key in self._cache:
+            return self._cache[key]
+        segs = self.retriever.segments(doc_id, attr, table)
+        if not segs:
+            # no relevant segments -> no LLM call at all (free negative)
+            self._cache[key] = None
+            return None
+        value, inp_tokens = self.extractor.extract(doc_id, attr, segs)
+        self.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD, out=OUTPUT_TOKENS,
+                           phase=phase)
+        self._cache[key] = value
+        return value
+
+    def _filter_cost(self, doc_id, flt: Filter, table: str = None) -> float:
+        if (doc_id, flt.attr) in self._cache:
+            return 0.0
+        t = self.retriever.segment_tokens(doc_id, flt.attr, table or flt.table or None)
+        return t + PROMPT_OVERHEAD if t > 0 else 0.0
+
+    # ------------------------------------------------------ sample phase --
+
+    def _prepare_table(self, query: Query, table: str) -> TableContext:
+        attrs = sorted(set(
+            [f.attr for f in iter_filters(query.where_for(table))]
+            + query.select_attrs(table)
+            + [j.left_attr if j.left_table == table else j.right_attr
+               for j in query.joins if table in (j.left_table, j.right_table)]))
+        docs = self.retriever.candidate_docs(table, attrs)
+        stats = SampleStats(table=table)
+        n = sample_size(len(docs), self.sample_rate)
+        if n < len(docs):
+            # rank-stratified: candidate_docs is distance-ordered, so picking
+            # evenly-spaced ranks from the nearer 60% yields in-domain
+            # evidence even when the table's domain is a small fraction of
+            # the pool, without collapsing the tau estimate to the very
+            # nearest docs; the random half keeps selectivity estimates
+            # representative of D_Q (DESIGN.md §8).
+            pool = list(docs)
+            k_head = (n + 1) // 2
+            top = pool[: max(k_head, int(0.6 * len(pool)))]
+            step = max(1, len(top) // k_head)
+            head = top[::step][:k_head]
+            rest = [d for d in pool if d not in head]
+            sampled = head + self.rng.sample(rest, n - len(head))
+        else:
+            sampled = list(docs)
+        for doc_id in sampled:
+            vals, segs_by_attr, inp_tokens = self.extractor.extract_full_doc(doc_id, attrs)
+            self.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
+                               out=OUTPUT_TOKENS * len(attrs), phase="sampling")
+            for attr in attrs:
+                v = vals.get(attr)
+                segs = segs_by_attr.get(attr, [])
+                stats.record(doc_id, attr, v, inp_tokens // max(len(attrs), 1), segs)
+                self._cache[(doc_id, attr)] = v
+                if segs:
+                    self.retriever.add_evidence(table, attr, segs)
+        stats.n_sampled = len(sampled)
+        self.retriever.finalize_thresholds(table, attrs, stats)
+        docs = self.retriever.refine_candidates(table, attrs)
+        # keep sampled docs in scope even if threshold refinement dropped them
+        doc_set = dict.fromkeys(list(docs) + sampled)
+        return TableContext(table, list(doc_set), query.where_for(table), stats)
+
+    # -------------------------------------------------- filter execution --
+
+    def _plan_for_doc(self, ctx: TableContext, doc_id) -> Optional[PlanNode]:
+        expr = ctx.full_expr()
+        if expr is None:
+            return None
+        doc_cost = lambda f: self._filter_cost(doc_id, f, ctx.name)
+        sel = ctx.stats.selectivity
+        if self.ordering == "quest":
+            return plan_expression(expr, doc_cost, sel)
+        if self.ordering == "exhaust":
+            from .ordering import exhaustive_plan
+            return exhaustive_plan(expr, doc_cost, sel)
+        if self.ordering == "avg_cost":   # global order: sample-mean costs
+            return plan_expression(expr, lambda f: ctx.stats.mean_cost(f.attr), sel)
+        from .ordering import plan_fixed_order
+        if self.ordering == "selectivity":
+            return plan_fixed_order(expr, doc_cost, sel, key_fn=lambda n: n.prob)
+        if self.ordering == "random":
+            return plan_fixed_order(expr, doc_cost, sel,
+                                    key_fn=lambda n: self.rng.random())
+        raise ValueError(f"unknown ordering {self.ordering!r}")
+
+    def _eval_plan(self, node: PlanNode, ctx: TableContext, doc_id) -> bool:
+        if node.kind == "filter":
+            v = self._extract(doc_id, node.filter.attr, table=ctx.name)
+            return node.filter.evaluate(v)
+        if node.kind == "and":
+            return all(self._eval_plan(c, ctx, doc_id) for c in node.children)
+        return any(self._eval_plan(c, ctx, doc_id) for c in node.children)
+
+    def _execute_filters(self, ctx: TableContext, query: Query) -> list:
+        """Returns surviving doc ids (instance-optimized per-doc plans)."""
+        expr = ctx.full_expr()
+        survivors = []
+        select_attrs = set(query.select_attrs(ctx.name))
+        # §3.1.3: with a disjunctive root, attrs in both SELECT and WHERE must
+        # be extracted regardless — pull them first (cache makes their
+        # filters free, so the orderer then front-loads them).
+        overlap = []
+        if isinstance(expr, Or):
+            overlap = [a for a in expr_attrs(expr) if a in select_attrs]
+        for doc_id in ctx.doc_ids:
+            for attr in overlap:
+                self._extract(doc_id, attr, table=ctx.name)
+            plan = self._plan_for_doc(ctx, doc_id)
+            if plan is None or self._eval_plan(plan, ctx, doc_id):
+                survivors.append(doc_id)
+            if plan is not None and len(self._plan_log) < 64:
+                self._plan_log[(ctx.name, doc_id)] = plan.describe()
+        return survivors
+
+    # ----------------------------------------------------- cost models ----
+
+    def _table_first_two_terms(self, ctx: TableContext, join_attr: str) -> float:
+        """Eq. 9/10 first two terms: expected filter cost + P(pass) * cost of
+        extracting the join attribute, summed over the table's documents."""
+        total = 0.0
+        for doc_id in ctx.doc_ids:
+            plan = self._plan_for_doc(ctx, doc_id)
+            c_join = self._filter_cost(doc_id, Filter(join_attr, "=", None), ctx.name)
+            if plan is None:
+                total += c_join
+            else:
+                total += plan.cost + plan.prob * c_join
+        return total
+
+    def _table_in_augmented_cost(self, ctx: TableContext, join_attr: str,
+                                 values: set) -> float:
+        """Expected cost of the IN-augmented plan on `ctx` (third term)."""
+        in_f = Filter(join_attr, "in", frozenset(values), table=ctx.name)
+        sel = ctx.stats.in_filter_selectivity(join_attr, set(values))
+        base = ctx.full_expr()
+        expr = in_f if base is None else And((in_f, base))
+        total = 0.0
+        for doc_id in ctx.doc_ids:
+            plan = plan_expression(
+                expr, lambda f: self._filter_cost(doc_id, f, ctx.name),
+                lambda f: sel if f is in_f else ctx.stats.selectivity(f))
+            total += plan.cost
+        return total
+
+    # ------------------------------------------------------------ joins ---
+
+    def _edge_tables(self, edge: JoinEdge):
+        return ((edge.left_table, edge.left_attr), (edge.right_table, edge.right_attr))
+
+    def _execute_edge(self, query: Query, edge: JoinEdge, ctxs: dict,
+                      done_tables: dict) -> None:
+        """Join transformation for one edge. `done_tables`: table ->
+        {doc_id: join-ready}, updated in place with survivors."""
+        (t1, a1), (t2, a2) = self._edge_tables(edge)
+        if t1 in done_tables and t2 in done_tables:
+            return
+        if t2 in done_tables:       # orient: t1 = side to execute first
+            (t1, a1), (t2, a2) = (t2, a2), (t1, a1)
+        if t1 not in done_tables:
+            # choose direction by the two-term cost model (§3.2.1)
+            c12 = self._table_first_two_terms(ctxs[t1], a1)
+            c21 = self._table_first_two_terms(ctxs[t2], a2)
+            if c21 < c12:
+                (t1, a1), (t2, a2) = (t2, a2), (t1, a1)
+            survivors = self._execute_filters(ctxs[t1], query)
+            done_tables[t1] = survivors
+        else:
+            survivors = done_tables[t1]
+        # extract join attribute on side-1 survivors
+        values = set()
+        for doc_id in survivors:
+            v = self._extract(doc_id, a1, table=t1)
+            if v is not None:
+                values.add(v)
+        # transform join into IN filter on side 2, re-optimize, execute
+        in_f = Filter(a2, "in", frozenset(values), table=t2)
+        ctxs[t2].extra_filters.append(in_f)
+        done_tables[t2] = self._execute_filters(ctxs[t2], query)
+
+    def _choose_first_edge(self, query: Query, ctxs: dict) -> JoinEdge:
+        best, best_cost = None, float("inf")
+        for e in query.joins:
+            (t1, a1), (t2, a2) = self._edge_tables(e)
+            c = min(self._table_first_two_terms(ctxs[t1], a1),
+                    self._table_first_two_terms(ctxs[t2], a2))
+            if c < best_cost:
+                best, best_cost = e, c
+        return best
+
+    def _choose_next_edge(self, query: Query, ctxs: dict, done: dict,
+                          remaining: list) -> JoinEdge:
+        """Adaptive ordering (§3.2.2): among edges touching the joined
+        prefix, estimate the IN-augmented cost on the new table."""
+        best, best_cost = None, float("inf")
+        for e in remaining:
+            (t1, a1), (t2, a2) = self._edge_tables(e)
+            if t1 in done and t2 in done:
+                return e          # closing a cycle: free-ish, do it now
+            if t1 not in done and t2 not in done:
+                continue
+            if t2 in done:
+                (t1, a1), (t2, a2) = (t2, a2), (t1, a1)
+            values = {self._cache.get((d, a1)) for d in done[t1]}
+            values.discard(None)
+            # survivors' join values may not all be extracted yet
+            for d in done[t1]:
+                values.add(self._extract(d, a1, table=t1))
+            values.discard(None)
+            c = self._table_in_augmented_cost(ctxs[t2], a2, values)
+            if c < best_cost:
+                best, best_cost = e, c
+        return best if best is not None else remaining[0]
+
+    def _assemble_rows(self, query: Query, done_tables: dict) -> list:
+        """Materialize joined rows (hash join over extracted join attrs of
+        surviving docs — the expensive extraction is already done)."""
+        tables = list(query.tables)
+        rows = [{tables[0]: d} for d in done_tables.get(tables[0], [])]
+        joined = {tables[0]}
+        edges = list(query.joins)
+        while edges:
+            e = next((e for e in edges if
+                      (e.left_table in joined) != (e.right_table in joined)
+                      or (e.left_table in joined and e.right_table in joined)), None)
+            if e is None:
+                break
+            edges.remove(e)
+            (t1, a1), (t2, a2) = self._edge_tables(e)
+            if t1 not in joined:
+                (t1, a1), (t2, a2) = (t2, a2), (t1, a1)
+            if t2 in joined:      # cycle edge: filter existing rows
+                rows = [r for r in rows
+                        if self._cache.get((r[t1], a1)) is not None
+                        and self._cache.get((r[t1], a1)) == self._cache.get((r[t2], a2))]
+                continue
+            index = {}
+            for d in done_tables.get(t2, []):
+                index.setdefault(self._cache.get((d, a2)), []).append(d)
+            new_rows = []
+            for r in rows:
+                v = self._cache.get((r[t1], a1))
+                for d in index.get(v, []) if v is not None else []:
+                    nr = dict(r)
+                    nr[t2] = d
+                    new_rows.append(nr)
+            rows = new_rows
+            joined.add(t2)
+        return rows
+
+    # ------------------------------------------------------------- main ---
+
+    def execute(self, query: Query) -> QueryResult:
+        t0 = time.time()
+        ctxs = {t: self._prepare_table(query, t) for t in query.tables}
+        done: dict = {}
+        if not query.joins:
+            t = query.tables[0]
+            done[t] = self._execute_filters(ctxs[t], query)
+            rows = [{t: d} for d in done[t]]
+        elif self.join_strategy == "pushdown":
+            # classical Plan (1): push filters into every table, extract the
+            # join attributes of all survivors, hash join.
+            for t in query.tables:
+                done[t] = self._execute_filters(ctxs[t], query)
+            for e in query.joins:
+                for t, a in self._edge_tables(e):
+                    for d in done.get(t, []):
+                        self._extract(d, a, table=t)
+            rows = self._assemble_rows(query, done)
+        else:
+            remaining = list(query.joins)
+            first = self._choose_first_edge(query, ctxs)
+            remaining.remove(first)
+            self._execute_edge(query, first, ctxs, done)
+            while remaining:
+                nxt = self._choose_next_edge(query, ctxs, done, remaining)
+                remaining.remove(nxt)
+                self._execute_edge(query, nxt, ctxs, done)
+            for t in query.tables:      # disconnected tables: plain filters
+                if t not in done:
+                    done[t] = self._execute_filters(ctxs[t], query)
+            rows = self._assemble_rows(query, done)
+
+        # project SELECT attributes (extracted only for surviving rows)
+        out_rows = []
+        for r in rows:
+            rec = {}
+            ok = True
+            for t, a in query.select:
+                v = self._extract(r[t], a, table=t)
+                rec[f"{t}.{a}"] = v
+                if v is None:
+                    ok = False
+            rec["_docs"] = dict(r)
+            if ok:
+                out_rows.append(rec)
+        self.ledger.wall_time_s += time.time() - t0
+        return QueryResult(out_rows, self.ledger, dict(self._plan_log),
+                           meta={"survivors": {k: len(v) for k, v in done.items()}})

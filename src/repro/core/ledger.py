@@ -1,0 +1,51 @@
+"""LLM cost accounting — the paper's primary metric (tokens per document).
+
+Every extraction charges input tokens (prompt overhead + relevant-segment
+tokens) and output tokens. The ledger is threaded through extractors so
+benchmarks report exactly what Table 3 of the paper reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class CostLedger:
+    input_tokens: int = 0
+    output_tokens: int = 0
+    llm_calls: int = 0
+    extractions: int = 0
+    wall_time_s: float = 0.0
+    per_phase: dict = field(default_factory=dict)   # phase -> token count
+
+    def charge(self, *, inp: int, out: int = 0, calls: int = 1, phase: str = "query"):
+        self.input_tokens += inp
+        self.output_tokens += out
+        self.llm_calls += calls
+        self.extractions += 1
+        self.per_phase[phase] = self.per_phase.get(phase, 0) + inp + out
+
+    @property
+    def total_tokens(self) -> int:
+        return self.input_tokens + self.output_tokens
+
+    def snapshot(self) -> dict:
+        return {
+            "input_tokens": self.input_tokens,
+            "output_tokens": self.output_tokens,
+            "total_tokens": self.total_tokens,
+            "llm_calls": self.llm_calls,
+            "extractions": self.extractions,
+            "per_phase": dict(self.per_phase),
+        }
+
+    def merged(self, other: "CostLedger") -> "CostLedger":
+        out = CostLedger(self.input_tokens + other.input_tokens,
+                         self.output_tokens + other.output_tokens,
+                         self.llm_calls + other.llm_calls,
+                         self.extractions + other.extractions,
+                         self.wall_time_s + other.wall_time_s)
+        for d in (self.per_phase, other.per_phase):
+            for k, v in d.items():
+                out.per_phase[k] = out.per_phase.get(k, 0) + v
+        return out

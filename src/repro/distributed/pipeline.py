@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism over the `pod` axis (DESIGN.md §4).
+
+Alternative use of the multi-pod mesh: instead of cross-pod data
+parallelism (one gradient all-reduce over the slow inter-pod links every
+step), split the layer stack into `n_stages = pod` contiguous stages and
+stream microbatches through with `collective_permute` handoffs — the only
+cross-pod traffic is one activation tensor per microbatch per boundary,
+which for large models is orders of magnitude less than a gradient
+all-reduce.
+
+Schedule: classic GPipe (fill/steady/drain) expressed as a lax.scan over
+`n_micro + n_stages - 1` ticks inside a shard_map that is manual over
+`pod` and auto over (data, model) — within a stage, the usual FSDP+TP
+layout keeps working untouched.
+
+Bubble fraction = (n_stages - 1) / (n_micro + n_stages - 1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_forward(mesh, stage_fn, n_micro: int, *, axis: str = "pod"):
+    """Builds fwd(stage_params, x_micro) running `stage_fn` as a pipeline.
+
+    stage_fn(stage_params, x) -> y : one stage's computation (same shape in
+    and out — e.g. a slice of transformer layers on the residual stream).
+    stage_params: pytree whose leaves have a leading `n_stages` dim
+    (sharded over `axis`); x_micro: (n_micro, mb, ...) microbatched input
+    (replicated across pods; stage 0 consumes it).
+
+    Returns out: (n_micro, mb, ...) — stage `n_stages-1`'s outputs
+    (valid on the last pod; psum-broadcast to all pods for convenience).
+    """
+    n_stages = mesh.shape[axis]
+
+    def run(stage_params, x_micro):
+        # shard_map gives each pod its (1, ...) slice of the stage stack
+        stage_params = jax.tree.map(lambda a: a[0], stage_params)
+        idx = jax.lax.axis_index(axis)
+        ticks = n_micro + n_stages - 1
+        mb_shape = x_micro.shape[1:]
+
+        def tick(carry, t):
+            inbuf, outs = carry
+            # stage 0 injects microbatch t (when valid); others use inbuf
+            mb_in = jnp.where(t < n_micro, jnp.minimum(t, n_micro - 1), 0)
+            x0 = jax.lax.dynamic_index_in_dim(x_micro, mb_in, keepdims=False)
+            x = jnp.where(idx == 0, x0, inbuf)
+            y = stage_fn(stage_params, x)
+            # my microbatch id at this tick: t - idx (valid if 0 <= . < n_micro)
+            my_mb = t - idx
+            valid = (my_mb >= 0) & (my_mb < n_micro)
+            # last stage stores its result
+            store_at = jnp.clip(my_mb, 0, n_micro - 1)
+            is_last = idx == n_stages - 1
+            outs = jax.lax.cond(
+                valid & is_last,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y.astype(o.dtype), store_at, 0),
+                lambda o: o, outs)
+            # hand off to the next stage (ring permute; last->0 ignored)
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, outs), None
+
+        inbuf0 = jnp.zeros(mb_shape, x_micro.dtype)
+        outs0 = jnp.zeros((n_micro,) + mb_shape, x_micro.dtype)
+        (_, outs), _ = jax.lax.scan(tick, (inbuf0, outs0), jnp.arange(ticks))
+        # broadcast final-stage outputs to every pod
+        mask = (idx == n_stages - 1).astype(outs.dtype)
+        return jax.lax.psum(outs * mask, axis)
+
+    def fwd(stage_params, x_micro):
+        pspecs = jax.tree.map(lambda _: P(axis), stage_params)
+        return jax.shard_map(
+            run, mesh=mesh,
+            in_specs=(pspecs, P()),
+            out_specs=P(),
+            axis_names={axis},
+            check_vma=False,
+        )(stage_params, x_micro)
+
+    return fwd
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)

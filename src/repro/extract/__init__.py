@@ -1,0 +1,3 @@
+from .oracle import OracleExtractor
+
+__all__ = ["OracleExtractor"]

@@ -1,0 +1,87 @@
+"""ServedExtractor: QUEST's extraction operator driven by the *real* JAX
+serving engine.
+
+The retrieved segments become a real prompt; prefill/decode run through
+`repro.serving.ServingEngine` (continuous batching, KV caches, the whole
+substrate), and the ledger charges the engine's true token counts. Since no
+pretrained checkpoint ships in this container, answer *parsing* falls back
+to the corpus pattern oracle when the model's decoded text doesn't parse —
+cost/latency are real, accuracy is oracle-backed; with a trained checkpoint
+(`examples/train_extractor.py`) the decoded text itself is used. This split
+is documented in DESIGN.md §8.1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.data import lm_data
+from repro.data.tokens import count_tokens
+from repro.serving.engine import Request, ServingEngine
+
+MAX_PROMPT_TOKENS = 220
+
+
+@dataclass
+class ServedStats:
+    requests: int = 0
+    prompt_tokens: int = 0
+    generated_tokens: int = 0
+
+
+class ServedExtractor:
+    def __init__(self, corpus, engine: ServingEngine, *, max_new: int = 12,
+                 oracle_fallback: bool = True):
+        self.corpus = corpus
+        self.engine = engine
+        self.max_new = max_new
+        self.oracle_fallback = oracle_fallback
+        self.stats = ServedStats()
+        self._rid = 0
+
+    def _generate(self, prompt_text: str) -> str:
+        toks = lm_data.encode(prompt_text)[: 4 * MAX_PROMPT_TOKENS]
+        self._rid += 1
+        req = Request(rid=self._rid, prompt=toks or [lm_data.BOS],
+                      max_new=self.max_new, eos_id=lm_data.EOS)
+        self.engine.submit(req)
+        done = self.engine.run()
+        out = done[self._rid].out
+        self.stats.requests += 1
+        self.stats.prompt_tokens += len(toks)
+        self.stats.generated_tokens += len(out)
+        return lm_data.decode(out)
+
+    def _spec(self, doc_id, attr):
+        doc = self.corpus.docs[doc_id]
+        spec = self.corpus.spec(doc.domain, attr)
+        if spec is None:
+            for attrs in self.corpus.attr_specs.values():
+                if attr in attrs:
+                    return attrs[attr]
+        return spec
+
+    def extract(self, doc_id, attr: str, segments: list):
+        text = " ".join(segments)
+        tokens = count_tokens(text)
+        if not text:
+            return None, 0
+        answer = self._generate(f"Extract {attr}. Context: {text} Answer:")
+        spec = self._spec(doc_id, attr)
+        value = spec.parse(answer) if spec else None
+        if value is None and self.oracle_fallback and spec is not None:
+            value = spec.parse(text)
+        return value, tokens
+
+    def extract_full_doc(self, doc_id, attrs: list):
+        doc = self.corpus.docs[doc_id]
+        tokens = doc.tokens or count_tokens(doc.text)
+        values, segs = {}, {}
+        for attr in attrs:
+            spec = self.corpus.spec(doc.domain, attr)
+            v = spec.parse(doc.text) if spec else None
+            values[attr] = v
+            if v is not None and attr in doc.spans:
+                segs[attr] = [doc.spans[attr]]
+        # one real engine call represents the full-document analysis prompt
+        self._generate(f"Extract {', '.join(attrs)}. Document: {doc.text[:800]}")
+        return values, segs, tokens

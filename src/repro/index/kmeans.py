@@ -1,0 +1,48 @@
+"""K-means in JAX (evidence clustering, paper §4.2; also the IVF coarse
+quantizer). k-means++ init (numpy, deterministic) + jit'd Lloyd iterations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _kmeanspp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    n = x.shape[0]
+    centers = [x[rng.integers(n)]]
+    for _ in range(1, k):
+        d2 = np.min(((x[:, None, :] - np.stack(centers)[None]) ** 2).sum(-1), axis=1)
+        tot = d2.sum()
+        if tot <= 1e-12:
+            centers.append(x[rng.integers(n)])
+            continue
+        centers.append(x[rng.choice(n, p=d2 / tot)])
+    return np.stack(centers)
+
+
+@jax.jit
+def _lloyd_step(x, centers):
+    d2 = ((x[:, None, :] - centers[None]) ** 2).sum(-1)          # (n, k)
+    assign = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, centers.shape[0], dtype=x.dtype)
+    counts = onehot.sum(0)
+    sums = onehot.T @ x
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1),
+                    centers)
+    return new, assign
+
+
+def kmeans(x: np.ndarray, k: int, *, iters: int = 25, seed: int = 0):
+    """Returns (centers (k,d), assignments (n,)). Deterministic."""
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    if n == 0:
+        return np.zeros((0, x.shape[1] if x.ndim == 2 else 0), np.float32), np.zeros((0,), np.int32)
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    centers = jnp.asarray(_kmeanspp_init(x, k, rng))
+    xj = jnp.asarray(x)
+    assign = None
+    for _ in range(iters):
+        centers, assign = _lloyd_step(xj, centers)
+    return np.asarray(centers), np.asarray(assign)

@@ -1,0 +1,101 @@
+"""Vector indexes over L2 distance on L2-normalized embeddings (paper §4.2:
+monotonically equivalent to cosine ranking).
+
+`ExactIndex` is the oracle; `IVFIndex` (k-means coarse quantizer + nprobe)
+is the scalable variant used at corpus scale. Both expose `search` (top-k)
+and `range_search` (distance threshold tau/gamma). The hot loop delegates to
+`repro.kernels.ops.topk_l2` (Pallas on TPU, jnp elsewhere).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .kmeans import kmeans
+
+
+def _topk_l2(db: np.ndarray, q: np.ndarray, k: int):
+    from repro.kernels import ops
+    return ops.topk_l2(db, q, k)
+
+
+class ExactIndex:
+    def __init__(self, embeddings: np.ndarray, ids: list | None = None):
+        self.emb = np.asarray(embeddings, np.float32)
+        self.ids = list(ids) if ids is not None else list(range(len(self.emb)))
+
+    def __len__(self):
+        return len(self.ids)
+
+    def search(self, q: np.ndarray, k: int):
+        """q: (d,) or (m, d). Returns (ids, dists) per query."""
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        k = min(k, len(self.ids))
+        if k == 0 or not len(self.ids):
+            return [([], [])] * len(q)
+        dists, idx = _topk_l2(self.emb, q, k)
+        out = []
+        for row_d, row_i in zip(np.asarray(dists), np.asarray(idx)):
+            out.append(([self.ids[int(i)] for i in row_i], [float(d) for d in row_d]))
+        return out
+
+    def range_search(self, q: np.ndarray, tau: float):
+        """All ids with L2 distance < tau, sorted ascending by distance."""
+        if not len(self.ids):
+            return [], []
+        q = np.asarray(q, np.float32)
+        d = np.sqrt(np.maximum(((self.emb - q[None]) ** 2).sum(-1), 0.0))
+        order = np.argsort(d)
+        keep = [int(i) for i in order if d[i] < tau]
+        return [self.ids[i] for i in keep], [float(d[i]) for i in keep]
+
+    def distance(self, q: np.ndarray, id_) -> float:
+        i = self.ids.index(id_)
+        return float(np.sqrt(((self.emb[i] - q) ** 2).sum()))
+
+
+class IVFIndex:
+    """Inverted-file index: coarse k-means partitions, probe `nprobe` lists.
+
+    Approximate; recall controlled by nprobe. Used for corpus-scale document/
+    segment stores (paper cites PQ/HNSW — IVF is the TPU-friendly choice: the
+    probed lists become dense tiles for the topk_l2 kernel)."""
+
+    def __init__(self, embeddings: np.ndarray, ids: list | None = None,
+                 n_lists: int = 16, nprobe: int = 4, seed: int = 0):
+        self.emb = np.asarray(embeddings, np.float32)
+        self.ids = list(ids) if ids is not None else list(range(len(self.emb)))
+        n_lists = max(1, min(n_lists, len(self.ids)))
+        self.nprobe = max(1, min(nprobe, n_lists))
+        self.centers, assign = kmeans(self.emb, n_lists, seed=seed)
+        self.lists = [np.where(assign == c)[0] for c in range(len(self.centers))]
+
+    def _probe(self, q: np.ndarray) -> np.ndarray:
+        d = ((self.centers - q[None]) ** 2).sum(-1)
+        lists = np.argsort(d)[: self.nprobe]
+        rows = [self.lists[int(li)] for li in lists]
+        rows = [r for r in rows if len(r)]
+        return np.concatenate(rows) if rows else np.zeros((0,), np.int64)
+
+    def search(self, q: np.ndarray, k: int):
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        out = []
+        for qq in q:
+            rows = self._probe(qq)
+            if not len(rows):
+                out.append(([], []))
+                continue
+            d = np.sqrt(np.maximum(((self.emb[rows] - qq[None]) ** 2).sum(-1), 0.0))
+            order = np.argsort(d)[: min(k, len(rows))]
+            out.append(([self.ids[int(rows[i])] for i in order],
+                        [float(d[i]) for i in order]))
+        return out
+
+    def range_search(self, q: np.ndarray, tau: float):
+        q = np.asarray(q, np.float32)
+        rows = self._probe(q)
+        if not len(rows):
+            return [], []
+        d = np.sqrt(np.maximum(((self.emb[rows] - q[None]) ** 2).sum(-1), 0.0))
+        order = np.argsort(d)
+        keep = [i for i in order if d[i] < tau]
+        return [self.ids[int(rows[i])] for i in keep], [float(d[i]) for i in keep]

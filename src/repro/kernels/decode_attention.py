@@ -1,0 +1,90 @@
+"""Pallas TPU flash-decoding (single-token attention over a long KV cache).
+
+One query token per (batch, head); the KV sequence is tiled and reduced
+sequentially with online-softmax accumulators in VMEM scratch. Padded cache
+positions (>= length) are masked. This kernel is the per-device leaf of the
+sequence-sharded decode path (distributed/decode.py): shard_map splits S
+over the `model` mesh axis, each device runs this kernel on its shard, and
+the partial (max, denom, acc) combine happens with tiny collectives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bk: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    q = q_ref[0, 0, :].astype(jnp.float32)                  # (D,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.sum(k * q[None, :], axis=1) * (q.shape[0] ** -0.5)   # (bk,)
+    pos = j * bk + jax.lax.iota(jnp.int32, bk)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_scr[0, 0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[0, 0] = l_scr[0, 0] * alpha + p.sum()
+    acc_scr[0, :] = acc_scr[0, :] * alpha + jnp.sum(p[:, None] * v, axis=0)
+    m_scr[0, 0] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :] = (acc_scr[0, :] / jnp.maximum(l_scr[0, 0], 1e-30)
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, length, *, bk=512,
+                            interpret=False):
+    """q: (B, H, D); caches: (B, S, Hkv, D); length: scalar int. -> (B, H, D)."""
+    B, H, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    lengths = jnp.full((1,), length, jnp.int32)
+
+    grid = (B, H, nk)
+    kernel = functools.partial(_kernel, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, D), lambda b, h, j, lens: (b, h, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, j, lens: (b, j, h // G, 0)),
+                pl.BlockSpec((1, bk, 1, D), lambda b, h, j, lens: (b, j, h // G, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j, lens: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)
+    return out

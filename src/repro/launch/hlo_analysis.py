@@ -1,0 +1,129 @@
+"""Post-compile HLO inspection: collective byte accounting.
+
+Parses optimized (post-SPMD) HLO text — shapes there are *per device* — and
+sums operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Collectives inside `while` bodies appear
+once in the text regardless of trip count, so totals from a scanned model
+understate per-step traffic; the roofline pipeline therefore extrapolates
+from unrolled reduced-depth probes (launch/roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_DEF_RE = re.compile(r"%?([\w.\-_]+)\s*=\s*(\(?)([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_INSTR_RE = re.compile(
+    r"%?([\w.\-_]+)\s*=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: operand_bytes_summed} (per-device bytes).
+
+    Byte convention: sum of *result* tuple shapes for -start ops is skipped
+    (we count each collective once via its non-start form or start form
+    only), and operand bytes are taken from the shapes embedded in the
+    instruction's own result/operand type strings.
+    """
+    totals: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    seen_started = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        name, result_types, kind, operands = m.groups()
+        is_start = f"{kind}-start(" in line
+        is_done = f"{kind}-done(" in line
+        if is_done:
+            continue
+        if is_start:
+            seen_started.add(name)
+        # operand shapes: prefer explicit types in the operand list; fall
+        # back to the result type (same size for all-reduce / permute).
+        op_shapes = _SHAPE_RE.findall(operands)
+        if op_shapes:
+            b = sum(_shape_bytes(dt, dims) for dt, dims in op_shapes)
+        else:
+            res_shapes = _SHAPE_RE.findall(result_types)
+            b = sum(_shape_bytes(dt, dims) for dt, dims in res_shapes)
+        totals[kind] += b
+        counts[kind] += 1
+    totals = dict(totals)
+    totals["_counts"] = dict(counts)
+    totals["_total"] = sum(v for k, v in totals.items() if not k.startswith("_"))
+    return totals
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def collective_bytes_by_site(hlo_text: str, top: int = 15) -> list:
+    """Attribution: (bytes, kind, dtype, op_name) for the largest collective
+    sites — the hillclimb diagnosis view."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        name, res, kind, operands = m.groups()
+        if f"{kind}-done(" in line:
+            continue
+        shapes = _SHAPE_RE.findall(operands) or _SHAPE_RE.findall(res)
+        b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        dt = shapes[0][0] if shapes else "?"
+        mm = _META_RE.search(line)
+        site = mm.group(1) if mm else "?"
+        out.append((b, kind, dt, site[:120]))
+    out.sort(reverse=True)
+    return out[:top]
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    keep = {}
+    for k, v in dict(ca).items():
+        if k in ("flops", "bytes accessed", "transcendentals",
+                 "bytes accessed0{}", "bytes accessedout{}", "optimal_seconds"):
+            keep[k] = float(v)
+    keep.setdefault("flops", float(dict(ca).get("flops", 0.0)))
+    return keep

@@ -1,0 +1,197 @@
+"""Abstract input/parameter/cache specs for lowering (no allocation).
+
+`input_specs(arch, shape, mesh)` returns ShapeDtypeStructs (with shardings
+attached) for every model input of the given (architecture x input-shape)
+cell — weak-type-correct, shardable, zero bytes allocated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import init_decode_cache, init_params
+from repro.models.config import ModelConfig
+from repro.models.model import VISION_DIM
+from repro.distributed import sharding as sh
+from repro.training.optim import OptConfig, make_optimizer
+from repro.training.train_step import make_train_step
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def abstract_params(cfg: ModelConfig, mesh=None, dtype=None, overrides=None):
+    shapes = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    dt = dtype or cfg.dtype
+    if mesh is None:
+        return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt), shapes)
+    specs = sh.param_specs(cfg, shapes, mesh, overrides)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, dt,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def abstract_opt_state(cfg: ModelConfig, params_abs, opt_cfg: OptConfig, mesh=None):
+    init_fn, _ = make_optimizer(opt_cfg)
+    shapes = jax.eval_shape(init_fn, params_abs)
+    if mesh is None:
+        return shapes
+    pspecs = sh.param_specs(cfg, params_abs, mesh)
+    ospecs = sh.opt_state_specs(cfg, shapes, pspecs, mesh)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, ospecs)
+
+
+def abstract_cache(cfg: ModelConfig, B: int, max_len: int, mesh=None):
+    shapes = jax.eval_shape(partial(init_decode_cache, cfg, B, max_len))
+    if mesh is None:
+        return shapes
+    specs = sh.cache_specs(cfg, shapes, mesh, B)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def _batch_structs(cfg: ModelConfig, shape: ShapeSpec, mesh, *, train: bool):
+    B, S = shape.global_batch, shape.seq_len
+    bspec = sh.batch_spec(mesh, B) if mesh else ()
+    b = bspec if bspec else None
+    mk = lambda shp, dt, sp: sds(shp, dt, mesh, sp)
+    batch = {}
+    if cfg.family == "vlm":
+        n_img = cfg.n_image_tokens
+        batch["tokens"] = mk((B, S - n_img), jnp.int32, P(b, None))
+        batch["image_embeds"] = mk((B, n_img, VISION_DIM), jnp.dtype(cfg.dtype),
+                                   P(b, None, None))
+    else:
+        batch["tokens"] = mk((B, S), jnp.int32, P(b, None))
+    if cfg.family == "encdec":
+        batch["frames"] = mk((B, cfg.encoder_seq, cfg.d_model),
+                             jnp.dtype(cfg.dtype), P(b, None, None))
+    if train:
+        batch["labels"] = mk(batch["tokens"].shape, jnp.int32, P(b, None))
+    return batch
+
+
+def input_specs(arch: str, shape_name: str, mesh=None, *, opt_cfg=None,
+                cfg: ModelConfig | None = None, shard_overrides=None,
+                decode_layout: str = "default"):
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    Returns a dict:
+      train  : {params, opt_state, batch}
+      prefill: {params, batch}
+      decode : {params, token, cache}
+    """
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    B = shape.global_batch
+    if shape.kind == "train":
+        params = abstract_params(cfg, mesh, dtype=jnp.float32,
+                                 overrides=shard_overrides)
+        opt_cfg = opt_cfg or default_opt_cfg(cfg)
+        opt = abstract_opt_state(cfg, params, opt_cfg, mesh)
+        batch = _batch_structs(cfg, shape, mesh, train=True)
+        return {"params": params, "opt_state": opt, "batch": batch,
+                "opt_cfg": opt_cfg}
+    params = abstract_params(cfg, mesh, overrides=shard_overrides)
+    if shape.kind == "prefill":
+        return {"params": params,
+                "batch": _batch_structs(cfg, shape, mesh, train=False)}
+    # decode: one new token against a seq_len cache
+    if decode_layout == "ws2d":
+        # 2D weight-stationary serving: batch replicated, cache sequence
+        # sharded over (data, model) — weights never move, activations do.
+        token = sds((B, 1), jnp.int32, mesh, P())
+        cache = abstract_cache_ws2d(cfg, B, shape.seq_len, mesh)
+        pos = sds((), jnp.int32, mesh, P())
+        cache = dict(cache)
+        cache["pos"] = pos
+        return {"params": params, "token": token, "cache": cache}
+    bspec = sh.batch_spec(mesh, B) if mesh else ()
+    b = bspec if bspec else None
+    token = sds((B, 1), jnp.int32, mesh, P(b, None))
+    cache = abstract_cache(cfg, B, shape.seq_len, mesh)
+    # decode starts at a full cache position
+    pos = jnp.asarray(shape.seq_len - 1, jnp.int32) if mesh is None else \
+        sds((), jnp.int32, mesh, P())
+    cache = dict(cache)
+    cache["pos"] = pos
+    return {"params": params, "token": token, "cache": cache}
+
+
+def default_opt_cfg(cfg: ModelConfig) -> OptConfig:
+    """Memory-appropriate optimizer per model size (DESIGN.md §4)."""
+    n = cfg.param_count()
+    if n > 100e9:
+        return OptConfig(name="adam8bit")
+    if n > 25e9:
+        return OptConfig(name="adafactor")
+    return OptConfig(name="adamw")
+
+
+def default_microbatch(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """Gradient-accumulation microbatch: keep per-device activation tokens
+    bounded (~2k tokens/device/microstep with remat)."""
+    if shape.kind != "train":
+        return 0
+    n_batch_devices = 1
+    for a in sh.batch_spec(mesh, shape.global_batch):
+        n_batch_devices *= mesh.shape[a]
+    per_dev = shape.global_batch // max(n_batch_devices, 1)
+    # microbatch must stay divisible by the batch-sharded device count
+    mb = shape.global_batch
+    while mb > n_batch_devices and (mb // 2) % n_batch_devices == 0 and \
+            (mb // 2) * shape.seq_len // n_batch_devices >= 2048:
+        mb //= 2
+    return mb if mb < shape.global_batch else 0
+
+
+def abstract_cache_ws2d(cfg: ModelConfig, B: int, max_len: int, mesh):
+    """ws2d decode cache: sequence over (data, model), batch replicated."""
+    shapes = jax.eval_shape(partial(init_decode_cache, cfg, B, max_len))
+    total = 1
+    for a in ("data", "model"):
+        if a in mesh.axis_names:
+            total *= mesh.shape[a]
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        shp = leaf.shape
+        seq = ("data", "model")
+        if name in ("k", "v"):          # (L, B, S, Hkv, hd)
+            s = seq if shp[2] % total == 0 else None
+            return P(None, None, s, None, None)
+        if name in ("ck", "cv"):
+            return P(None, None, None, None, None)
+        if name in ("ckv", "krope"):    # (L, B, S, r)
+            s = seq if shp[2] % total == 0 else None
+            return P(None, None, s, None)
+        if name == "ssm":
+            s = "model" if shp[2] % mesh.shape["model"] == 0 else None
+            return P(None, None, s) + P(*([None] * (len(shp) - 3)))
+        if name == "conv":
+            s = "model" if shp[3] % mesh.shape["model"] == 0 else None
+            return P(None, None, None, s)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = jax.tree_util.tree_unflatten(treedef, [spec(p, l) for p, l in flat])
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)

@@ -1,0 +1,6 @@
+from .config import ModelConfig
+from .model import (decode_step, forward, init_decode_cache, init_params,
+                    param_count, prefill)
+
+__all__ = ["ModelConfig", "init_params", "forward", "prefill", "decode_step",
+           "init_decode_cache", "param_count"]

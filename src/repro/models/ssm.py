@@ -1,0 +1,245 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD chunked) blocks, TPU-adapted.
+
+Hardware adaptation note (see DESIGN.md §5): the CUDA reference realizes the
+selective scan as a warp-parallel prefix scan in shared memory. On TPU we
+instead (a) express Mamba2's scalar-decay recurrence in the SSD *matrix* form
+(chunked: intra-chunk attention-like matmuls feed the MXU, inter-chunk carry
+is a tiny scan), and (b) express Mamba1's per-channel-decay recurrence as a
+lane-vectorized sequential scan (channels on the 128-wide VPU lanes, time
+sequential) — the Pallas `ssm_scan` kernel keeps the state VMEM-resident.
+The pure-jnp forms below are the oracles and the XLA/dry-run path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+
+def causal_depthwise_conv(x, w, b):
+    """x: (B, S, C); w: (K, C); b: (C). Causal depthwise conv."""
+    K, C = w.shape
+    out = lax.conv_general_dilated(
+        x, w[:, None, :], window_strides=(1,), padding=[(K - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+    return out + b
+
+
+def conv_step(conv_state, x_t, w, b):
+    """One decode step of the causal conv. conv_state: (B, K-1, C); x_t: (B, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return window[:, 1:], y
+
+
+# ------------------------------------------------------------- mamba 1 -----
+
+
+def mamba1_init(cfg: ModelConfig, key):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    r, K = cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    std = 0.02
+    dt_init = jnp.exp(jax.random.uniform(ks[5], (di,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * std,
+        "conv_w": jax.random.normal(ks[1], (K, di), jnp.float32) * std,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(ks[2], (di, r + 2 * N), jnp.float32) * std,
+        "dt_proj": jax.random.normal(ks[3], (r, di), jnp.float32) * (r ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),  # softplus^-1 of dt_init
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), jnp.float32) * std / math.sqrt(2 * cfg.num_layers),
+    }
+
+
+def _mamba1_ssm_inputs(cfg: ModelConfig, p, x):
+    """Shared pre-scan computation. x: (B, S, d)."""
+    N, r = cfg.ssm_state, cfg.resolved_dt_rank
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    return x_in, z
+
+
+def _mamba1_scan_params(cfg, p, x_conv):
+    N, r = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = x_conv @ p["x_proj"]
+    dt_raw, B_mat, C_mat = proj[..., :r], proj[..., r:r + N], proj[..., r + N:]
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di,N)
+    return dt, A, B_mat, C_mat
+
+
+def mamba1_scan_ref(x, dt, A, B_mat, C_mat, D, h0=None):
+    """Reference selective scan. x,dt: (B,S,di); A: (di,N); B,C: (B,S,N).
+
+    Returns (y (B,S,di), h_final (B,di,N)). fp32 state.
+    """
+    Bsz, S, di = x.shape
+    N = A.shape[-1]
+    h = jnp.zeros((Bsz, di, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        da = jnp.exp(dt_t[..., None] * A)                       # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C_mat, 1, 0).astype(jnp.float32))
+    h, ys = lax.scan(step, h, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D
+    return y.astype(x.dtype), h
+
+
+def mamba1_apply(cfg: ModelConfig, p, x, *, ssm_kernel=None):
+    x_in, z = _mamba1_ssm_inputs(cfg, p, x)
+    x_conv = jax.nn.silu(causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, A, B_mat, C_mat = _mamba1_scan_params(cfg, p, x_conv)
+    scan = ssm_kernel or mamba1_scan_ref
+    y, _ = scan(x_conv, dt, A, B_mat, C_mat, p["D"])
+    return (y * jax.nn.silu(z)) @ p["out_proj"]
+
+
+def mamba1_decode(cfg: ModelConfig, p, x_t, *, conv_state, ssm_state):
+    """x_t: (B, 1, d). conv_state: (B, K-1, di); ssm_state: (B, di, N) fp32."""
+    x_in, z = _mamba1_ssm_inputs(cfg, p, x_t)
+    conv_state, xc = conv_step(conv_state, x_in[:, 0], p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)[:, None, :]
+    dt, A, B_mat, C_mat = _mamba1_scan_params(cfg, p, xc)
+    da = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A)
+    ssm_state = da * ssm_state + (dt[:, 0] * xc[:, 0])[..., None].astype(jnp.float32) * B_mat[:, 0, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", ssm_state, C_mat[:, 0].astype(jnp.float32))
+    y = (y + xc[:, 0].astype(jnp.float32) * p["D"]).astype(x_t.dtype)[:, None, :]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, conv_state, ssm_state
+
+
+# ------------------------------------------------------------- mamba 2 -----
+
+
+def mamba2_init(cfg: ModelConfig, key):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, K = cfg.n_ssm_heads, cfg.ssm_conv
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    dt_init = jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * N + h), jnp.float32) * std,
+        "conv_w": jax.random.normal(ks[1], (K, conv_dim), jnp.float32) * std,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d), jnp.float32) * std / math.sqrt(2 * cfg.num_layers),
+    }
+
+
+def _mamba2_proj(cfg: ModelConfig, p, x):
+    di, N, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_raw = zxbcdt[..., di + di + 2 * N:]
+    return z, xbc, dt_raw
+
+
+def mamba2_ssd_ref(x, dt, A, B_mat, C_mat, D, *, chunk: int, h0=None):
+    """SSD chunked scan (matrix form). x: (B,S,h,p); dt: (B,S,h); A: (h,);
+    B_mat/C_mat: (B,S,N) (single group). Returns (y, final_state (B,h,p,N))."""
+    Bsz, S, H, P = x.shape
+    N = B_mat.shape[-1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:  # zero-pad: dt=0 => decay 1, contribution 0 => state preserved
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B_mat, C_mat = zp(x), zp(dt), zp(B_mat), zp(C_mat)
+    S_pad = S + pad
+    nc = S_pad // c
+    f32 = jnp.float32
+
+    xr = x.reshape(Bsz, nc, c, H, P).astype(f32)
+    dtr = (dt.reshape(Bsz, nc, c, H).astype(f32))
+    Br = B_mat.reshape(Bsz, nc, c, N).astype(f32)
+    Cr = C_mat.reshape(Bsz, nc, c, N).astype(f32)
+
+    dtA = dtr * A                                   # (B,nc,c,h)
+    L = jnp.cumsum(dtA, axis=2)                     # inclusive cumsum
+    # intra-chunk: M[t,j] = exp(L_t - L_j) * (C_t.B_j) * dt_j  for j <= t
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]          # (B,nc,c,c,h)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bnce,bnje->bncj", Cr, Br)
+    M = CB[..., None] * decay * dtr[:, :, None, :, :]          # (B,nc,c,c,h)
+    y_intra = jnp.einsum("bncjh,bnjhp->bnchp", M, xr)
+
+    # chunk summaries: state contribution  S_n = sum_j exp(L_end - L_j) dt_j B_j x_j
+    seg = jnp.exp(L[:, :, -1:, :] - L)                         # (B,nc,c,h)
+    states = jnp.einsum("bnch,bnce,bnchp->bnhpe", seg * dtr, Br, xr)  # (B,nc,h,p,N)
+    chunk_decay = jnp.exp(L[:, :, -1, :])                      # (B,nc,h)
+
+    def carry_step(hprev, inp):
+        st, cd = inp                                           # (B,h,p,N), (B,h)
+        hnew = cd[..., None, None] * hprev + st
+        return hnew, hprev
+
+    h_init = jnp.zeros((Bsz, H, P, N), f32) if h0 is None else h0.astype(f32)
+    h_fin, h_before = lax.scan(
+        carry_step, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)                    # (B,nc,h,p,N)
+
+    # inter-chunk contribution: y_t += C_t . (exp(L_t) * h_in)
+    y_inter = jnp.einsum("bnce,bnch,bnhpe->bnchp", Cr, jnp.exp(L), h_before)
+    y = (y_intra + y_inter).reshape(Bsz, S_pad, H, P) + xr.reshape(Bsz, S_pad, H, P) * D[:, None]
+    y = y[:, :S]
+    return y.astype(x.dtype), h_fin
+
+
+def mamba2_apply(cfg: ModelConfig, p, x, *, ssd_kernel=None):
+    B, S, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.mamba_headdim
+    z, xbc, dt_raw = _mamba2_proj(cfg, p, x)
+    xbc = jax.nn.silu(causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"]))
+    x_in, B_mat, C_mat = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    ssd = ssd_kernel or mamba2_ssd_ref
+    y, _ = ssd(x_in.reshape(B, S, H, P), dt, A, B_mat, C_mat, p["D"], chunk=cfg.ssm_chunk)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_decode(cfg: ModelConfig, p, x_t, *, conv_state, ssm_state):
+    """x_t: (B,1,d); conv_state: (B,K-1,di+2N); ssm_state: (B,h,p,N) fp32."""
+    B = x_t.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.mamba_headdim
+    z, xbc, dt_raw = _mamba2_proj(cfg, p, x_t)
+    conv_state, xc = conv_step(conv_state, xbc[:, 0], p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    x_in, B_mat, C_mat = xc[..., :di], xc[..., di:di + N], xc[..., di + N:]
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"]).astype(jnp.float32)   # (B,h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)                                       # (B,h)
+    xh = x_in.reshape(B, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, B_mat.astype(jnp.float32))
+    ssm_state = da[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, C_mat.astype(jnp.float32))
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(B, 1, di).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_state, ssm_state

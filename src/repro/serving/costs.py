@@ -1,0 +1,87 @@
+"""Serving cost model per architecture (DESIGN.md §3 arch-applicability).
+
+QUEST's optimizer prices an extraction by tokens; deploying it on a real
+fleet needs tokens -> seconds/Joules per architecture. This module derives
+first-order per-token costs from the ModelConfig (prefill FLOPs/token,
+decode state bytes/token) and the roofline hardware constants, giving the
+QUEST cost model its hardware-aware exchange rate (used by
+benchmarks/common.derived_latency_s and reported per arch below).
+
+SSM archs have O(1) decode state instead of a KV cache — exactly the
+"cost-model constants change, technique unchanged" note of DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+
+
+@dataclass(frozen=True)
+class ServingCosts:
+    arch: str
+    prefill_flops_per_token: float
+    decode_flops_per_token: float
+    kv_bytes_per_token: float        # cache growth per generated/ctx token
+    state_bytes: float               # O(1) recurrent state (SSM), per seq
+    prefill_tokens_per_s_chip: float
+    decode_ms_per_token_chip: float  # memory-bound decode estimate @ ctx
+
+    def extraction_seconds(self, prompt_tokens: int, output_tokens: int,
+                           chips: int = 1) -> float:
+        t_pre = prompt_tokens / (self.prefill_tokens_per_s_chip * chips)
+        t_dec = output_tokens * self.decode_ms_per_token_chip / 1e3 / chips
+        return t_pre + t_dec
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // max(cfg.attn_every, 1)
+    elif cfg.family == "encdec":
+        n_attn = cfg.num_layers
+    else:
+        n_attn = cfg.num_layers
+    if cfg.use_mla:
+        return n_attn * (cfg.kv_lora_rank + cfg.qk_rope_dim) * dtype_bytes
+    return n_attn * 2 * nkv * hd * dtype_bytes
+
+
+def recurrent_state_bytes(cfg: ModelConfig) -> float:
+    if not cfg.mamba_version:
+        return 0.0
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    conv_dim = di + (2 * N if cfg.mamba_version == 2 else 0)
+    return cfg.num_layers * (di * N * 4 + (K - 1) * conv_dim * 2)
+
+
+def serving_costs(cfg: ModelConfig, *, context: int = 4096,
+                  mfu: float = 0.4) -> ServingCosts:
+    """First-order costs at a given decode context length."""
+    n_active = cfg.param_count(active_only=True)
+    pre_flops = 2.0 * n_active
+    dec_flops = 2.0 * n_active
+    kv_tok = kv_bytes_per_token(cfg)
+    state = recurrent_state_bytes(cfg)
+    # decode: read all weights + the context's cache once per token
+    weight_bytes = n_active * 2
+    dec_bytes = weight_bytes + kv_tok * context + state
+    return ServingCosts(
+        arch=cfg.name,
+        prefill_flops_per_token=pre_flops,
+        decode_flops_per_token=dec_flops,
+        kv_bytes_per_token=kv_tok,
+        state_bytes=state,
+        prefill_tokens_per_s_chip=mfu * PEAK_FLOPS / pre_flops,
+        decode_ms_per_token_chip=1e3 * dec_bytes / HBM_BW,
+    )
+
+
+def cost_table(context: int = 4096) -> list[ServingCosts]:
+    from repro.configs import ARCH_IDS, get_config
+    return [serving_costs(get_config(a), context=context) for a in ARCH_IDS]

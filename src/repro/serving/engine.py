@@ -1,0 +1,144 @@
+"""Batched serving engine with continuous batching (slot-based).
+
+Requests prefill individually (exact length — correct for SSM state too),
+land in a slot of the batched decode cache, and decode advances all live
+slots each step with per-row cache positions (see layers.cache_write).
+Finished rows free their slot immediately for queued requests — the
+"extraction operator fleet" behaviour QUEST's per-document plans produce
+(heterogeneous short extraction calls).
+
+Fault tolerance: `drain_slot` evicts a request (e.g. on a simulated worker
+failure) and requeues it; the scheduler resubmits from the prompt.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_decode_cache, prefill
+from repro.models.config import ModelConfig
+from repro.data import lm_data
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int = 16
+    eos_id: int = lm_data.EOS
+    out: list = field(default_factory=list)
+    done: bool = False
+    submitted_s: float = 0.0
+    finished_s: float = 0.0
+    retries: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.queue: deque = deque()
+        self.active: dict = {}          # slot -> Request
+        self.finished: dict = {}
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "evictions": 0}
+
+        self.cache = init_decode_cache(cfg, slots, max_len)
+        self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
+        self._live = np.zeros((slots,), bool)
+        self._tokens = jnp.zeros((slots, 1), jnp.int32)
+
+        self._decode = jax.jit(partial(decode_step, cfg))
+        self._prefill_cache = {}
+
+    # ------------------------------------------------------------ intake --
+
+    def submit(self, req: Request):
+        req.submitted_s = time.time()
+        self.queue.append(req)
+
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_cache:
+            self._prefill_cache[length] = jax.jit(
+                partial(prefill, self.cfg, max_len=self.max_len))
+        return self._prefill_cache[length]
+
+    def _insert(self, slot: int, req: Request):
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": toks}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((1, self.cfg.encoder_seq, self.cfg.d_model),
+                                        jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "vlm":
+            from repro.models.model import VISION_DIM
+            batch["image_embeds"] = jnp.zeros((1, self.cfg.n_image_tokens, VISION_DIM),
+                                              jnp.float32)
+        logits, c1 = self._prefill_fn(toks.shape[1])(self.params, batch)
+        self.stats["prefill_tokens"] += toks.shape[1]
+
+        def put(dst, src):
+            # stacked caches: (L, B, ...) — batch dim is axis 1
+            return dst.at[:, slot].set(src[:, 0])
+
+        new_cache = dict(self.cache)
+        for k in self.cache:
+            if k == "pos":
+                continue
+            new_cache[k] = put(self.cache[k], c1[k])
+        new_cache["pos"] = self.cache["pos"].at[slot].set(int(c1["pos"]))
+        self.cache = new_cache
+        nxt = int(jnp.argmax(logits[0, -1]))
+        self._tokens = self._tokens.at[slot, 0].set(nxt)
+        req.out.append(nxt)
+        self.active[slot] = req
+        self._live[slot] = True
+
+    # ------------------------------------------------------------- decode --
+
+    def _step(self):
+        logits, self.cache = self._decode(self.params, self._tokens, self.cache)
+        self.stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            full = int(np.asarray(self.cache["pos"])[slot]) >= self.max_len - 1
+            if tok == req.eos_id or len(req.out) >= req.max_new or full:
+                req.done = True
+                req.finished_s = time.time()
+                self.finished[req.rid] = req
+                del self.active[slot]
+                self._live[slot] = False
+        self._tokens = jnp.asarray(nxt[:, None], jnp.int32)
+
+    def drain_slot(self, slot: int):
+        """Evict + requeue (straggler/failure mitigation)."""
+        if slot in self.active:
+            req = self.active.pop(slot)
+            self._live[slot] = False
+            req.out.clear()
+            req.retries += 1
+            self.stats["evictions"] += 1
+            self.queue.appendleft(req)
+
+    # --------------------------------------------------------------- run ---
+
+    def run(self, max_steps: int = 10_000):
+        while (self.queue or self.active) and max_steps > 0:
+            max_steps -= 1
+            while self.queue and not self._live.all():
+                slot = int(np.argmin(self._live))
+                self._insert(slot, self.queue.popleft())
+            if self.active:
+                self._step()
+        return self.finished

@@ -1,0 +1,215 @@
+"""Optimizers (pure JAX, pytree states): AdamW, Adafactor, 8-bit Adam.
+
+8-bit Adam (blockwise-quantized moments) and Adafactor (factored second
+moment) are the memory levers that keep grok-1-314b / deepseek-67b training
+states inside a v5e's 16 GB HBM at 256-chip scale (see EXPERIMENTS.md
+§Dry-run memory table). Optimizer states inherit each parameter's sharding.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor | adam8bit
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # 128 divides every sharded trailing-dim tile on the (16,16) mesh —
+    # misaligned quant blocks force SPMD gathers of the int8 state (§Perf)
+    q_block: int = 128             # adam8bit quantization block
+
+
+def lr_schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ------------------------------------------------------------ quant utils --
+
+
+def _q8(x, block):
+    """Blockwise int8 quantization along the LAST axis (layout-preserving:
+    the int8 tensor keeps the parameter's shape, so it inherits the
+    parameter's sharding with zero SPMD resharding)."""
+    shape = x.shape
+    nb = shape[-1] // block
+    xf = x.reshape(shape[:-1] + (nb, block))
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xf / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q.reshape(shape), scale[..., 0].astype(jnp.float32)
+
+
+def _dq8(q, scale, block):
+    shape = q.shape
+    qf = q.reshape(shape[:-1] + (-1, block)).astype(jnp.float32)
+    return (qf * scale[..., None]).reshape(shape)
+
+
+# -------------------------------------------------------------- adamw ------
+
+
+def adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** step)
+        vhat = v / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ------------------------------------------------------------ adafactor ----
+
+
+def adafactor_init(params):
+    def z(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(z, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(f, g, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim >= 2:
+            vr = decay * f["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * f["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
+                             / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], 1e-30))
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            denom = jnp.sqrt(v)
+            nf = {"v": v}
+        delta = g / jnp.maximum(denom, 1e-12)
+        # relative step-size clipping (Adafactor's update clipping)
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)))
+        delta = delta / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), nf
+
+    is_f = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    out = jax.tree.map(upd, state["f"], grads, params, is_leaf=is_f)
+    # out mirrors params' structure with (new_p, new_f) tuples at leaves
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_f = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"f": new_f, "step": step}
+
+
+# ------------------------------------------------------------- adam8bit ----
+
+
+def adam8bit_init(params, q_block=256):
+    def z(p):
+        if p.ndim == 0 or p.shape[-1] % q_block or p.size < 4 * q_block:
+            # small / ragged tensors keep fp32 moments (negligible memory)
+            return {"m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+        nb = p.shape[-1] // q_block
+        return {"mq": jnp.zeros(p.shape, jnp.int8),
+                "ms": jnp.zeros(p.shape[:-1] + (nb,), jnp.float32),
+                "vq": jnp.zeros(p.shape, jnp.int8),
+                "vs": jnp.zeros(p.shape[:-1] + (nb,), jnp.float32)}
+    return {"q": jax.tree.map(z, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adam8bit_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(q, g, p):
+        g = g.astype(jnp.float32)
+        if "mq" in q:
+            m = _dq8(q["mq"], q["ms"], cfg.q_block)
+            v = _dq8(q["vq"], q["vs"], cfg.q_block)
+        else:
+            m, v = q["m"], q["v"]
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** step)
+        vhat = v / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(jnp.maximum(vhat, 0.0)) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if "mq" in q:
+            mq, ms = _q8(m, cfg.q_block)
+            vq, vs = _q8(v, cfg.q_block)
+            return new_p, {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+        return new_p, {"m": m, "v": v}
+
+    # NOTE(§Perf): scanning this update over the layer-stack dim was tried
+    # to cap fp32 dequant transients; on the CPU-XLA dry-run backend the
+    # while-loop operand copies *added* ~7 GiB instead (refuted there;
+    # revisit on real TPU where loop operands alias).
+    out = jax.tree.map(upd, state["q"], grads, params,
+                       is_leaf=lambda x: isinstance(x, dict) and ("mq" in x or "m" in x))
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_q = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"q": new_q, "step": step}
+
+
+# ------------------------------------------------------------- registry ----
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adamw_init, partial(adamw_update, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, partial(adafactor_update, cfg)
+    if cfg.name == "adam8bit":
+        return partial(adam8bit_init, q_block=cfg.q_block), partial(adam8bit_update, cfg)
+    raise ValueError(cfg.name)

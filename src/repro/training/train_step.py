@@ -1,0 +1,92 @@
+"""Training step factory: CE loss (vocab-sharded-safe), grad clip, optional
+microbatch gradient accumulation and a grad_transform hook (used by the
+pod-axis int8 gradient compression in repro/distributed/compression.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from .optim import OptConfig, clip_by_global_norm, make_optimizer
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (B, S, V) any float dtype; labels: (B, S) int32.
+
+    Computed in fp32 with logsumexp over the (possibly model-sharded) vocab
+    axis — GSPMD turns the reductions into partial sums + all-reduce without
+    materializing an unsharded logits tensor.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def make_loss_fn(cfg: ModelConfig, *, remat=True, constrain=None,
+                 aux_coef=None, unroll=False):
+    aux_coef = cfg.router_aux_coef if aux_coef is None else aux_coef
+
+    def loss_fn(params, batch):
+        logits, aux = forward(cfg, params, batch, remat=remat,
+                              constrain=constrain, unroll=unroll)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        loss = cross_entropy(logits, labels, mask)
+        return loss + aux_coef * aux, {"ce": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *, remat=True,
+                    constrain=None, grad_transform=None, microbatch: int = 0,
+                    unroll=False):
+    """Returns (init_opt_state, train_step).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    microbatch > 0 splits the batch along axis 0 and accumulates grads with
+    lax.scan (activation memory ∝ microbatch, not global batch).
+    """
+    loss_fn = make_loss_fn(cfg, remat=remat, constrain=constrain, unroll=unroll)
+    init_fn, update_fn = make_optimizer(opt_cfg)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if not microbatch:
+            (loss, aux), grads = vg(params, batch)
+            return loss, aux, grads
+        B = batch["tokens"].shape[0]
+        n = B // microbatch
+        resh = lambda x: x.reshape((n, microbatch) + x.shape[1:])
+        mb = jax.tree.map(resh, batch)
+
+        def body(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, _), grads = vg(params, mbatch)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        return loss_sum / n, {"ce": loss_sum / n, "aux": jnp.float32(0)}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, aux, grads = compute_grads(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        params, opt_state = update_fn(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return params, opt_state, metrics
+
+    return init_fn, train_step

@@ -1,0 +1,114 @@
+"""Unit tests for the index substrate: embedder, segmenter, vector indexes,
+k-means, thresholds and retrieval modes; plus hypothesis properties on the
+vector-index contract.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.corpus import make_wiki_corpus
+from repro.data.tokens import count_tokens, split_sentences
+from repro.index.embedder import HashedEmbedder
+from repro.index.kmeans import kmeans
+from repro.index.retriever import TwoLevelRetriever
+from repro.index.segmenter import key_sentences, segment_document
+from repro.index.vector_index import ExactIndex, IVFIndex
+
+
+def test_embedder_deterministic_and_normalized():
+    e = HashedEmbedder()
+    a = e.embed(["the cat sat on the mat", "a completely different sentence"])
+    b = e.embed(["the cat sat on the mat", "a completely different sentence"])
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_allclose(np.linalg.norm(a, axis=1), 1.0, atol=1e-5)
+    # similar sentences are closer than dissimilar ones
+    sim = e.embed(["the cat sat on the mat", "the cat sat on a mat",
+                   "quarterly revenue guidance was revised upward"])
+    d_close = np.linalg.norm(sim[0] - sim[1])
+    d_far = np.linalg.norm(sim[0] - sim[2])
+    assert d_close < d_far
+
+
+def test_segmenter_covers_text():
+    text = ("First point about apples. Second point about apples. "
+            "Now trains are different. Trains run on tracks. "
+            "Finally, a word on cheese.")
+    segs = segment_document("d", text, HashedEmbedder())
+    joined = " ".join(s.text for s in segs)
+    for sent in split_sentences(text):
+        assert sent in joined
+    assert all(s.tokens == count_tokens(s.text) for s in segs)
+
+
+def test_key_sentences_keeps_lead():
+    text = " ".join([f"Sentence number {i} mentions value {i*7}." for i in range(20)])
+    summary = key_sentences(text, max_sentences=5)
+    assert "Sentence number 0" in summary
+    assert count_tokens(summary) < count_tokens(text)
+
+
+@given(st.integers(min_value=1, max_value=40), st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=25, deadline=None)
+def test_exact_index_topk_property(n, k, seed):
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n, 16)).astype(np.float32)
+    idx = ExactIndex(emb)
+    q = rng.normal(size=(16,)).astype(np.float32)
+    (ids, dists), = idx.search(q, min(k, n))
+    brute = np.sqrt(((emb - q) ** 2).sum(-1))
+    want = np.sort(brute)[: len(ids)]
+    np.testing.assert_allclose(sorted(dists), want, rtol=1e-4, atol=1e-4)
+    # range search consistent with distances
+    tau = float(np.median(brute))
+    rids, rd = idx.range_search(q, tau)
+    assert set(rids) == {i for i, d in enumerate(brute) if d < tau}
+
+
+def test_ivf_recall_reasonable():
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(512, 32)).astype(np.float32)
+    exact = ExactIndex(emb)
+    ivf = IVFIndex(emb, n_lists=16, nprobe=6)
+    hits = 0
+    for i in range(20):
+        q = rng.normal(size=(32,)).astype(np.float32)
+        (eids, _), = exact.search(q, 5)
+        (aids, _), = ivf.search(q, 5)
+        hits += len(set(eids) & set(aids))
+    assert hits / (20 * 5) >= 0.6        # nprobe=6/16 should recall most
+
+
+def test_kmeans_clusters_separate_data():
+    rng = np.random.default_rng(1)
+    a = rng.normal(loc=0.0, size=(50, 8))
+    b = rng.normal(loc=6.0, size=(50, 8))
+    x = np.concatenate([a, b]).astype(np.float32)
+    centers, assign = kmeans(x, 2, seed=3)
+    assert len(set(assign[:50])) == 1 and len(set(assign[50:])) == 1
+    assert assign[0] != assign[50]
+
+
+def test_retriever_fork_isolated():
+    corpus = make_wiki_corpus(0)
+    base = TwoLevelRetriever(corpus)
+    f1 = base.fork()
+    f1.add_evidence("players", "age", ["He is 31 years old."])
+    assert not base._attr_state
+    f2 = base.fork()
+    assert not f2._attr_state
+
+
+def test_retrieval_modes_contract():
+    corpus = make_wiki_corpus(0)
+    for mode in ("quest", "segment_only", "no_evidence", "llm_evidence",
+                 "rag_topk", "fulldoc"):
+        r = TwoLevelRetriever(corpus, mode=mode)
+        docs = r.candidate_docs("players", ["age"])
+        assert docs, mode
+        segs = r.segments(docs[0], "age", "players")
+        assert isinstance(segs, list)
+        if mode == "fulldoc":
+            assert segs[0] == corpus.docs[docs[0]].text
+        assert r.segment_tokens(docs[0], "age", "players") == \
+            sum(count_tokens(s) for s in segs)
