@@ -27,6 +27,8 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-3b", choices=ARCH_IDS)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="cross-document extraction batch (default: slots)")
     args = ap.parse_args()
 
     cfg = (get_config if args.full else get_smoke_config)(args.arch)
@@ -39,7 +41,8 @@ def main():
     corpus = make_swde_corpus()
     retriever = TwoLevelRetriever(corpus)
     extractor = ServedExtractor(corpus, engine)
-    quest = Engine(retriever, extractor, sample_rate=0.03)
+    batch = args.batch_size if args.batch_size is not None else args.slots
+    quest = Engine(retriever, extractor, sample_rate=0.03, batch_size=batch)
 
     query = Query(
         tables=["universities"],
@@ -58,6 +61,7 @@ def main():
     print("\nQUEST ledger:", result.ledger.snapshot())
     print("serving engine stats:", engine.stats)
     print("served extractor:", extractor.stats)
+    print("batch scheduler:", quest.scheduler.stats.snapshot())
 
 
 if __name__ == "__main__":

@@ -2,8 +2,10 @@ from .expr import And, Filter, JoinEdge, Or, Query, conj, disj
 from .executor import Engine, QueryResult
 from .ledger import CostLedger
 from .ordering import exhaustive_plan, plan_expression, plan_fixed_order
+from .scheduler import BatchScheduler, SchedulerStats
 from .stats import SampleStats
 
 __all__ = ["Filter", "And", "Or", "Query", "JoinEdge", "conj", "disj",
            "Engine", "QueryResult", "CostLedger", "SampleStats",
+           "BatchScheduler", "SchedulerStats",
            "plan_expression", "plan_fixed_order", "exhaustive_plan"]

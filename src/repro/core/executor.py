@@ -13,6 +13,13 @@ Flow per table (paper §2.2):
      the other side and let the orderer place it; multi-joins are ordered
      adaptively (left-deep, re-planned after every join).
 
+Execution is organized around the cross-document batch scheduler
+(DESIGN.md §9): each document's plan runs as a resumable coroutine that
+*yields* its next (doc, attr) extraction need, and `core.scheduler`
+batches the needs of all in-flight documents into `extract_batch` rounds.
+Within a document the lazy short-circuit order is untouched, so result
+rows and ledger token totals are identical at every `batch_size`.
+
 The engine is LLM-agnostic: `extractor` and `retriever` are duck-typed
 (OracleExtractor for controlled experiments, ServedExtractor for the real
 JAX serving engine; see repro/extract).
@@ -28,10 +35,8 @@ from .expr import (And, Expr, Filter, JoinEdge, Or, Query, expr_attrs,
                    filters_for_table, iter_filters)
 from .ledger import CostLedger
 from .ordering import PlanNode, plan_expression
+from .scheduler import OUTPUT_TOKENS, PROMPT_OVERHEAD, BatchScheduler
 from .stats import SampleStats, sample_size
-
-PROMPT_OVERHEAD = 40      # instruction tokens per extraction call
-OUTPUT_TOKENS = 12        # answer tokens per extraction call
 
 
 @dataclass
@@ -63,10 +68,13 @@ class Engine:
     def __init__(self, retriever, extractor, *, sample_rate: float = 0.05,
                  seed: int = 0, ordering: str = "quest",
                  join_strategy: str = "transform",
-                 ledger: Optional[CostLedger] = None):
+                 ledger: Optional[CostLedger] = None,
+                 batch_size: int = 1, queue_depth: int = 32):
         """ordering: quest | exhaust | avg_cost | selectivity | random
         (paper §5.3 baselines). join_strategy: transform | pushdown
-        (paper §5.4: QUEST's join transformation vs. classical Plan (1))."""
+        (paper §5.4: QUEST's join transformation vs. classical Plan (1)).
+        batch_size/queue_depth: cross-document batching knobs (DESIGN.md §9);
+        batch_size=1 is the serial per-extraction path."""
         self.retriever = retriever
         self.extractor = extractor
         self.sample_rate = sample_rate
@@ -76,23 +84,49 @@ class Engine:
         self.ledger = ledger if ledger is not None else CostLedger()
         self._cache: dict = {}          # (doc_id, attr) -> value
         self._plan_log: dict = {}
+        self._escalated: set = set()    # keys already retried full-doc
+        self.scheduler = BatchScheduler(retriever, extractor, self.ledger,
+                                        self._cache, batch_size=batch_size,
+                                        queue_depth=queue_depth)
 
     # ------------------------------------------------------------ basics --
 
-    def _extract(self, doc_id, attr: str, *, phase: str = "query", table: str = None):
+    def _extract_co(self, doc_id, attr: str, table: str):
+        """Coroutine flavour of `_extract`: yields the (doc, attr, table)
+        need when uncached; the scheduler resumes it once the batched
+        extraction round has landed in the cache."""
         key = (doc_id, attr)
-        if key in self._cache:
-            return self._cache[key]
-        segs = self.retriever.segments(doc_id, attr, table)
-        if not segs:
-            # no relevant segments -> no LLM call at all (free negative)
-            self._cache[key] = None
-            return None
-        value, inp_tokens = self.extractor.extract(doc_id, attr, segs)
-        self.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD, out=OUTPUT_TOKENS,
-                           phase=phase)
-        self._cache[key] = value
-        return value
+        if key not in self._cache:
+            yield (doc_id, attr, table)
+        return self._cache[key]
+
+    def _extract_required(self, keys: list, *, phase: str = "query") -> dict:
+        """Batch extraction for *output-critical* attributes (join keys and
+        SELECT projections): a None from segment-scoped extraction would
+        silently drop a result row, so it escalates once to a full-document
+        prompt, honestly charged (DESIGN.md §8.3). Filters never escalate —
+        their cheap free-negative semantics are the point of the index."""
+        got = self.scheduler.extract_many(keys, phase=phase)
+        retry = []
+        for doc_id, attr, _table in keys:
+            k = (doc_id, attr)
+            if got[k] is None and k not in self._escalated:
+                self._escalated.add(k)
+                retry.append(k)
+        bs = self.scheduler.batch_size
+        for i in range(0, len(retry), bs):
+            chunk = retry[i:i + bs]
+            items = [(d, a, [self.extractor.corpus.docs[d].text])
+                     for d, a in chunk]
+            out = self.extractor.extract_batch(items)
+            self.ledger.record_batch(len(items))
+            for (d, a), (value, inp_tokens) in zip(chunk, out):
+                self.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
+                                   out=OUTPUT_TOKENS, phase=phase)
+                if value is not None:
+                    self._cache[(d, a)] = value
+                    got[(d, a)] = value
+        return got
 
     def _filter_cost(self, doc_id, flt: Filter, table: str = None) -> float:
         if (doc_id, flt.attr) in self._cache:
@@ -127,8 +161,11 @@ class Engine:
             sampled = head + self.rng.sample(rest, n - len(head))
         else:
             sampled = list(docs)
+        # sampling goes through the same batched path as query execution:
+        # full-document prompts of a chunk share one continuous-batching round
+        full = self.scheduler.extract_full_docs(sampled, attrs)
         for doc_id in sampled:
-            vals, segs_by_attr, inp_tokens = self.extractor.extract_full_doc(doc_id, attrs)
+            vals, segs_by_attr, inp_tokens = full[doc_id]
             self.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
                                out=OUTPUT_TOKENS * len(attrs), phase="sampling")
             for attr in attrs:
@@ -168,18 +205,41 @@ class Engine:
                                     key_fn=lambda n: self.rng.random())
         raise ValueError(f"unknown ordering {self.ordering!r}")
 
-    def _eval_plan(self, node: PlanNode, ctx: TableContext, doc_id) -> bool:
+    def _eval_plan_co(self, node: PlanNode, ctx: TableContext, doc_id):
+        """Lazy plan evaluation as a coroutine: extraction needs are yielded
+        (and batched across documents by the scheduler); the short-circuit
+        order *within* this document is exactly the serial one."""
         if node.kind == "filter":
-            v = self._extract(doc_id, node.filter.attr, table=ctx.name)
+            v = yield from self._extract_co(doc_id, node.filter.attr, ctx.name)
             return node.filter.evaluate(v)
         if node.kind == "and":
-            return all(self._eval_plan(c, ctx, doc_id) for c in node.children)
-        return any(self._eval_plan(c, ctx, doc_id) for c in node.children)
+            for c in node.children:
+                ok = yield from self._eval_plan_co(c, ctx, doc_id)
+                if not ok:
+                    return False
+            return True
+        for c in node.children:
+            ok = yield from self._eval_plan_co(c, ctx, doc_id)
+            if ok:
+                return True
+        return False
+
+    def _doc_filter_co(self, ctx: TableContext, doc_id, overlap: list):
+        """One document's resumable step-machine: overlap prefetch, then
+        plan (costed on *this* doc's cached/pending state), then lazy eval."""
+        for attr in overlap:
+            yield from self._extract_co(doc_id, attr, ctx.name)
+        plan = self._plan_for_doc(ctx, doc_id)
+        if plan is not None and len(self._plan_log) < 64:
+            self._plan_log[(ctx.name, doc_id)] = plan.describe()
+        if plan is None:
+            return True
+        return (yield from self._eval_plan_co(plan, ctx, doc_id))
 
     def _execute_filters(self, ctx: TableContext, query: Query) -> list:
-        """Returns surviving doc ids (instance-optimized per-doc plans)."""
+        """Returns surviving doc ids (instance-optimized per-doc plans,
+        executed as in-flight coroutines under the batch scheduler)."""
         expr = ctx.full_expr()
-        survivors = []
         select_attrs = set(query.select_attrs(ctx.name))
         # §3.1.3: with a disjunctive root, attrs in both SELECT and WHERE must
         # be extracted regardless — pull them first (cache makes their
@@ -187,15 +247,9 @@ class Engine:
         overlap = []
         if isinstance(expr, Or):
             overlap = [a for a in expr_attrs(expr) if a in select_attrs]
-        for doc_id in ctx.doc_ids:
-            for attr in overlap:
-                self._extract(doc_id, attr, table=ctx.name)
-            plan = self._plan_for_doc(ctx, doc_id)
-            if plan is None or self._eval_plan(plan, ctx, doc_id):
-                survivors.append(doc_id)
-            if plan is not None and len(self._plan_log) < 64:
-                self._plan_log[(ctx.name, doc_id)] = plan.describe()
-        return survivors
+        passed = self.scheduler.run(
+            {d: self._doc_filter_co(ctx, d, overlap) for d in ctx.doc_ids})
+        return [d for d in ctx.doc_ids if passed[d]]
 
     # ----------------------------------------------------- cost models ----
 
@@ -251,12 +305,9 @@ class Engine:
             done_tables[t1] = survivors
         else:
             survivors = done_tables[t1]
-        # extract join attribute on side-1 survivors
-        values = set()
-        for doc_id in survivors:
-            v = self._extract(doc_id, a1, table=t1)
-            if v is not None:
-                values.add(v)
+        # extract join attribute on side-1 survivors (one batched sweep)
+        got = self._extract_required([(d, a1, t1) for d in survivors])
+        values = {v for v in got.values() if v is not None}
         # transform join into IN filter on side 2, re-optimize, execute
         in_f = Filter(a2, "in", frozenset(values), table=t2)
         ctxs[t2].extra_filters.append(in_f)
@@ -285,12 +336,9 @@ class Engine:
                 continue
             if t2 in done:
                 (t1, a1), (t2, a2) = (t2, a2), (t1, a1)
-            values = {self._cache.get((d, a1)) for d in done[t1]}
-            values.discard(None)
             # survivors' join values may not all be extracted yet
-            for d in done[t1]:
-                values.add(self._extract(d, a1, table=t1))
-            values.discard(None)
+            got = self._extract_required([(d, a1, t1) for d in done[t1]])
+            values = {v for v in got.values() if v is not None}
             c = self._table_in_augmented_cost(ctxs[t2], a2, values)
             if c < best_cost:
                 best, best_cost = e, c
@@ -347,10 +395,9 @@ class Engine:
             # join attributes of all survivors, hash join.
             for t in query.tables:
                 done[t] = self._execute_filters(ctxs[t], query)
-            for e in query.joins:
-                for t, a in self._edge_tables(e):
-                    for d in done.get(t, []):
-                        self._extract(d, a, table=t)
+            self._extract_required(
+                [(d, a, t) for e in query.joins
+                 for t, a in self._edge_tables(e) for d in done.get(t, [])])
             rows = self._assemble_rows(query, done)
         else:
             remaining = list(query.joins)
@@ -366,13 +413,16 @@ class Engine:
                     done[t] = self._execute_filters(ctxs[t], query)
             rows = self._assemble_rows(query, done)
 
-        # project SELECT attributes (extracted only for surviving rows)
+        # project SELECT attributes (extracted only for surviving rows,
+        # in one batched sweep — join rows repeating a doc dedup to one call)
+        got = self._extract_required(
+            [(r[t], a, t) for r in rows for t, a in query.select])
         out_rows = []
         for r in rows:
             rec = {}
             ok = True
             for t, a in query.select:
-                v = self._extract(r[t], a, table=t)
+                v = got[(r[t], a)]
                 rec[f"{t}.{a}"] = v
                 if v is None:
                     ok = False

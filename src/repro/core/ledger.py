@@ -17,6 +17,11 @@ class CostLedger:
     extractions: int = 0
     wall_time_s: float = 0.0
     per_phase: dict = field(default_factory=dict)   # phase -> token count
+    # per-batch accounting (DESIGN.md §9): token totals are batch-invariant,
+    # so batching shows up here and in wall time, never in the token columns
+    batches: int = 0
+    batched_extractions: int = 0
+    max_batch: int = 0
 
     def charge(self, *, inp: int, out: int = 0, calls: int = 1, phase: str = "query"):
         self.input_tokens += inp
@@ -24,6 +29,11 @@ class CostLedger:
         self.llm_calls += calls
         self.extractions += 1
         self.per_phase[phase] = self.per_phase.get(phase, 0) + inp + out
+
+    def record_batch(self, n: int):
+        self.batches += 1
+        self.batched_extractions += n
+        self.max_batch = max(self.max_batch, n)
 
     @property
     def total_tokens(self) -> int:
@@ -37,6 +47,9 @@ class CostLedger:
             "llm_calls": self.llm_calls,
             "extractions": self.extractions,
             "per_phase": dict(self.per_phase),
+            "batches": self.batches,
+            "batched_extractions": self.batched_extractions,
+            "max_batch": self.max_batch,
         }
 
     def merged(self, other: "CostLedger") -> "CostLedger":
@@ -45,6 +58,9 @@ class CostLedger:
                          self.llm_calls + other.llm_calls,
                          self.extractions + other.extractions,
                          self.wall_time_s + other.wall_time_s)
+        out.batches = self.batches + other.batches
+        out.batched_extractions = self.batched_extractions + other.batched_extractions
+        out.max_batch = max(self.max_batch, other.max_batch)
         for d in (self.per_phase, other.per_phase):
             for k, v in d.items():
                 out.per_phase[k] = out.per_phase.get(k, 0) + v

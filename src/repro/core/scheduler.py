@@ -1,0 +1,168 @@
+"""Cross-document batch scheduler for QUEST extraction (DESIGN.md §9).
+
+QUEST's instance-optimized plans are *per document*: each document decides
+lazily, filter by filter, which attribute to extract next. That is exactly
+wrong for a continuous-batching LLM substrate, which wants many concurrent
+requests. The scheduler reconciles the two: per-document plans run as
+resumable coroutines (generators yielding `(doc_id, attr, table)` extraction
+needs), and the scheduler accumulates the needs of all in-flight documents,
+deduplicates them against the engine cache and within the round, retrieves
+their segments in one vectorized pass, and submits them to the extractor as
+`extract_batch` rounds — so prefill/decode genuinely interleave across
+documents while every document keeps its own lazy short-circuit order.
+
+Because batching happens only *across* documents (never reordering the
+filters *within* one), result rows and ledger token totals are identical to
+serial execution at every batch size (tests/test_batching.py).
+
+Knobs: `batch_size` (max extractions per extract_batch round; 1 = the
+serial per-extraction path), `queue_depth` (max in-flight documents).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+PROMPT_OVERHEAD = 40      # instruction tokens per extraction call
+OUTPUT_TOKENS = 12        # answer tokens per extraction call
+
+
+@dataclass
+class SchedulerStats:
+    rounds: int = 0           # extract_batch submissions
+    submitted: int = 0        # extractions actually sent to the extractor
+    dedup_hits: int = 0       # duplicate (doc, attr) folded into one charge
+    cache_hits: int = 0       # needs answered from the engine cache
+    empty_retrievals: int = 0  # no relevant segments -> free negative
+    max_batch: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class BatchScheduler:
+    """Drives per-document coroutines and batches their extraction needs.
+
+    The coroutine protocol: a generator yields `(doc_id, attr, table)` when
+    it needs `cache[(doc_id, attr)]` filled; the scheduler resumes it after
+    the batched extraction lands. The generator's return value (via
+    StopIteration) is its result.
+    """
+
+    def __init__(self, retriever, extractor, ledger, cache: dict, *,
+                 batch_size: int = 1, queue_depth: int = 32):
+        self.retriever = retriever
+        self.extractor = extractor
+        self.ledger = ledger
+        self.cache = cache
+        self.batch_size = max(1, int(batch_size))
+        self.queue_depth = max(1, int(queue_depth))
+        self.stats = SchedulerStats()
+
+    # ------------------------------------------------------- coroutines ----
+
+    def run(self, coroutines: dict, *, phase: str = "query") -> dict:
+        """Drive {key: generator} to completion; returns {key: result}.
+
+        Up to `queue_depth` coroutines are in flight; each round collects one
+        pending extraction per blocked coroutine, resolves the deduplicated
+        set in `batch_size` chunks, then resumes everyone.
+        """
+        results: dict = {}
+        pending = deque(coroutines.items())
+        live: list = []
+        while pending or live:
+            while pending and len(live) < self.queue_depth:
+                live.append(pending.popleft())
+            needs: dict = {}            # ordered de-dup of this round's keys
+            blocked = []
+            for key, gen in live:
+                need = self._advance(key, gen, results)
+                if need is not None:
+                    if need in needs:
+                        self.stats.dedup_hits += 1
+                    needs[need] = None
+                    blocked.append((key, gen))
+            self._resolve(list(needs), phase=phase)
+            live = blocked
+        return results
+
+    def _advance(self, key, gen, results):
+        """Advance one coroutine until it blocks on an uncached extraction
+        (returns the need) or finishes (records its result, returns None)."""
+        while True:
+            try:
+                need = next(gen)
+            except StopIteration as stop:
+                results[key] = stop.value
+                return None
+            if (need[0], need[1]) not in self.cache:
+                return need
+            self.stats.cache_hits += 1
+
+    # ------------------------------------------------------ bulk extract ---
+
+    def extract_many(self, keys, *, phase: str = "query") -> dict:
+        """Batch-extract `(doc_id, attr, table)` keys; returns
+        {(doc_id, attr): value}. Duplicates and cached keys are charged once
+        (or not at all) — the dedup guarantee of DESIGN.md §9."""
+        todo, seen = [], set()
+        for doc_id, attr, table in keys:
+            k = (doc_id, attr)
+            if k in seen:
+                self.stats.dedup_hits += 1
+                continue
+            seen.add(k)
+            if k in self.cache:
+                self.stats.cache_hits += 1
+                continue
+            todo.append((doc_id, attr, table))
+        self._resolve(todo, phase=phase)
+        return {(d, a): self.cache.get((d, a)) for d, a, _ in keys}
+
+    def _resolve(self, keys: list, *, phase: str) -> None:
+        for i in range(0, len(keys), self.batch_size):
+            self._extract_chunk(keys[i:i + self.batch_size], phase=phase)
+
+    def _extract_chunk(self, chunk: list, *, phase: str) -> None:
+        prefetch = getattr(self.retriever, "prefetch_segments", None)
+        if prefetch is not None and len(chunk) > 1:
+            prefetch(chunk)
+        items, slots = [], []
+        for doc_id, attr, table in chunk:
+            segs = self.retriever.segments(doc_id, attr, table)
+            if not segs:
+                # no relevant segments -> no LLM call at all (free negative)
+                self.cache[(doc_id, attr)] = None
+                self.stats.empty_retrievals += 1
+                continue
+            items.append((doc_id, attr, segs))
+            slots.append((doc_id, attr))
+        if not items:
+            return
+        out = self.extractor.extract_batch(items)
+        self.stats.rounds += 1
+        self.stats.submitted += len(items)
+        self.stats.max_batch = max(self.stats.max_batch, len(items))
+        self.ledger.record_batch(len(items))
+        for (doc_id, attr), (value, inp_tokens) in zip(slots, out):
+            self.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
+                               out=OUTPUT_TOKENS, phase=phase)
+            self.cache[(doc_id, attr)] = value
+
+    # -------------------------------------------------- sampling phase -----
+
+    def extract_full_docs(self, doc_ids: list, attrs: list) -> dict:
+        """Batched sampling-phase extraction (full-document prompts).
+        Returns {doc_id: (values, segments_by_attr, input_tokens)} in the
+        given order; the served path submits each chunk as one
+        continuous-batching round."""
+        out: dict = {}
+        for i in range(0, len(doc_ids), self.batch_size):
+            chunk = doc_ids[i:i + self.batch_size]
+            res = self.extractor.extract_full_doc_batch(
+                [(d, attrs) for d in chunk])
+            self.ledger.record_batch(len(chunk))
+            for d, r in zip(chunk, res):
+                out[d] = r
+        return out

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 from repro.training.optim import _dq8, _q8
 
 Q_BLOCK = 256
@@ -86,7 +88,7 @@ def make_pod_grad_sync(mesh, *, compress: bool = True):
             return pod_all_mean(g, "pod")
 
         specs = jax.tree.map(lambda _: P(), grads)
-        fn = jax.shard_map(inner, mesh=mesh, in_specs=(specs,),
+        fn = shard_map(inner, mesh=mesh, in_specs=(specs,),
                            out_specs=specs,
                            axis_names={"pod"}, check_vma=False)
         return fn(grads)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def _partial_attn(axis, q, k_shard, v_shard, length):
     """Local partial attention + combine. q: (B,1,Hkv,G,hd) replicated;
@@ -38,7 +40,10 @@ def _partial_attn(axis, q, k_shard, v_shard, length):
     axes = axis if isinstance(axis, tuple) else (axis,)
     idx = 0
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        # jax.lax.axis_size is 0.5+; psum(1, axis) is the 0.4.x spelling
+        size = (jax.lax.axis_size(a) if hasattr(jax.lax, "axis_size")
+                else jax.lax.psum(1, a))
+        idx = idx * size + jax.lax.axis_index(a)
     s_loc = k_shard.shape[1]
     start = idx * s_loc
     s = jnp.einsum("bqhgd,bshd->bhgqs", q, k_shard,
@@ -73,7 +78,7 @@ def make_seq_sharded_decode_attn(mesh, axis="model",
     def attn(q, k_cache, v_cache, length):
         lengthv = jnp.asarray(length)
         len_spec = P(b) if lengthv.ndim else P()
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(_partial_attn, axes),
             mesh=mesh,
             in_specs=(P(b, None, None, None, None),

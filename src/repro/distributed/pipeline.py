@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def pipeline_forward(mesh, stage_fn, n_micro: int, *, axis: str = "pod"):
     """Builds fwd(stage_params, x_micro) running `stage_fn` as a pipeline.
@@ -77,7 +79,7 @@ def pipeline_forward(mesh, stage_fn, n_micro: int, *, axis: str = "pod"):
 
     def fwd(stage_params, x_micro):
         pspecs = jax.tree.map(lambda _: P(axis), stage_params)
-        return jax.shard_map(
+        return shard_map(
             run, mesh=mesh,
             in_specs=(pspecs, P()),
             out_specs=P(),

@@ -27,6 +27,23 @@ from repro.launch.mesh import batch_axes
 FSDP = "data"
 TP = "model"
 
+# jax >= 0.5 exposes shard_map at the top level with axis_names/check_vma;
+# 0.4.x has it under experimental with the complementary auto=/check_rep=
+# spelling. The wrapper accepts the new-style call and translates.
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=True):
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # 0.4.x partial-auto lowers to PartitionId ops the SPMD partitioner
+    # rejects; run fully manual instead — axes the specs don't mention are
+    # replicated per device, numerically identical (just unpartitioned),
+    # which needs the replication check off.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
 # trailing-dim roles per leaf name: 'f' = FSDP(data), 't' = TP(model),
 # '.' = replicated. Leading dims (layer stacks etc.) always replicate.
 _ROLES = {

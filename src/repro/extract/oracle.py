@@ -80,6 +80,18 @@ class OracleExtractor:
                 value = self._fabricate(attr, rng)
         return value, tokens
 
+    def extract_batch(self, items: list):
+        """Batched protocol: items = [(doc_id, attr, segments)], returns
+        [(value, input_tokens)]. The oracle is deterministic per (doc, attr),
+        so batching cannot change values or accounting — the property the
+        batched-execution equivalence tests lean on."""
+        return [self.extract(doc_id, attr, segments)
+                for doc_id, attr, segments in items]
+
+    def extract_full_doc_batch(self, items: list):
+        """items = [(doc_id, attrs)] -> [(values, segs_by_attr, tokens)]."""
+        return [self.extract_full_doc(doc_id, attrs) for doc_id, attrs in items]
+
     def extract_full_doc(self, doc_id, attrs: list[str]):
         """Sampling-phase call: whole document in, values + source segments
         out. Returns (values dict, segments-by-attr dict, input_tokens)."""

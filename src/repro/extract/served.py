@@ -9,6 +9,11 @@ to the corpus pattern oracle when the model's decoded text doesn't parse —
 cost/latency are real, accuracy is oracle-backed; with a trained checkpoint
 (`examples/train_extractor.py`) the decoded text itself is used. This split
 is documented in DESIGN.md §8.1.
+
+`extract_batch` is the cross-document fast path (DESIGN.md §9): N prompts
+are submitted together and drained by a *single* `engine.run()`, so the
+engine's slots stay full and prefill/decode interleave across documents —
+the serial `extract` path drains the engine once per extraction instead.
 """
 from __future__ import annotations
 
@@ -26,6 +31,8 @@ class ServedStats:
     requests: int = 0
     prompt_tokens: int = 0
     generated_tokens: int = 0
+    batches: int = 0          # extract_batch rounds (one engine.run() each)
+    max_batch: int = 0
 
 
 class ServedExtractor:
@@ -38,18 +45,39 @@ class ServedExtractor:
         self.stats = ServedStats()
         self._rid = 0
 
-    def _generate(self, prompt_text: str) -> str:
+    # ------------------------------------------------------------ serving --
+
+    def _make_request(self, prompt_text: str) -> Request:
         toks = lm_data.encode(prompt_text)[: 4 * MAX_PROMPT_TOKENS]
         self._rid += 1
-        req = Request(rid=self._rid, prompt=toks or [lm_data.BOS],
-                      max_new=self.max_new, eos_id=lm_data.EOS)
-        self.engine.submit(req)
-        done = self.engine.run()
-        out = done[self._rid].out
         self.stats.requests += 1
         self.stats.prompt_tokens += len(toks)
-        self.stats.generated_tokens += len(out)
-        return lm_data.decode(out)
+        return Request(rid=self._rid, prompt=toks or [lm_data.BOS],
+                       max_new=self.max_new, eos_id=lm_data.EOS)
+
+    def _run_round(self, reqs: list) -> dict:
+        """Submit N requests, drain with one continuous-batching run per
+        admission window (the engine's queue_depth, when set, bounds how
+        many requests may be queued at once)."""
+        window = self.engine.queue_depth or len(reqs)
+        outs = {}
+        for i in range(0, len(reqs), max(window, 1)):
+            chunk = reqs[i:i + max(window, 1)]
+            self.engine.submit_many(chunk)
+            done = self.engine.run()
+            self.stats.batches += 1
+            self.stats.max_batch = max(self.stats.max_batch, len(chunk))
+            for req in chunk:
+                out = done[req.rid].out
+                self.stats.generated_tokens += len(out)
+                outs[req.rid] = lm_data.decode(out)
+        return outs
+
+    def _generate(self, prompt_text: str) -> str:
+        req = self._make_request(prompt_text)
+        return self._run_round([req])[req.rid]
+
+    # ------------------------------------------------------------ parsing --
 
     def _spec(self, doc_id, attr):
         doc = self.corpus.docs[doc_id]
@@ -60,19 +88,38 @@ class ServedExtractor:
                     return attrs[attr]
         return spec
 
-    def extract(self, doc_id, attr: str, segments: list):
-        text = " ".join(segments)
-        tokens = count_tokens(text)
-        if not text:
-            return None, 0
-        answer = self._generate(f"Extract {attr}. Context: {text} Answer:")
+    def _parse(self, doc_id, attr: str, answer: str, context: str):
         spec = self._spec(doc_id, attr)
         value = spec.parse(answer) if spec else None
         if value is None and self.oracle_fallback and spec is not None:
-            value = spec.parse(text)
-        return value, tokens
+            value = spec.parse(context)         # DESIGN.md §8.1 split
+        return value
 
-    def extract_full_doc(self, doc_id, attrs: list):
+    # ----------------------------------------------------------- protocol --
+
+    def extract(self, doc_id, attr: str, segments: list):
+        return self.extract_batch([(doc_id, attr, segments)])[0]
+
+    def extract_batch(self, items: list):
+        """items = [(doc_id, attr, segments)] -> [(value, input_tokens)].
+        One continuous-batching round for the whole batch."""
+        results: list = [None] * len(items)
+        reqs, meta = [], []
+        for i, (doc_id, attr, segments) in enumerate(items):
+            text = " ".join(segments)
+            if not text:
+                results[i] = (None, 0)
+                continue
+            req = self._make_request(f"Extract {attr}. Context: {text} Answer:")
+            reqs.append(req)
+            meta.append((i, doc_id, attr, text, count_tokens(text), req.rid))
+        if reqs:
+            outs = self._run_round(reqs)
+            for i, doc_id, attr, text, tokens, rid in meta:
+                results[i] = (self._parse(doc_id, attr, outs[rid], text), tokens)
+        return results
+
+    def _full_doc_values(self, doc_id, attrs: list):
         doc = self.corpus.docs[doc_id]
         tokens = doc.tokens or count_tokens(doc.text)
         values, segs = {}, {}
@@ -82,6 +129,20 @@ class ServedExtractor:
             values[attr] = v
             if v is not None and attr in doc.spans:
                 segs[attr] = [doc.spans[attr]]
-        # one real engine call represents the full-document analysis prompt
-        self._generate(f"Extract {', '.join(attrs)}. Document: {doc.text[:800]}")
         return values, segs, tokens
+
+    def extract_full_doc(self, doc_id, attrs: list):
+        return self.extract_full_doc_batch([(doc_id, attrs)])[0]
+
+    def extract_full_doc_batch(self, items: list):
+        """Sampling phase, batched: one real engine round represents the
+        full-document analysis prompts of the whole chunk."""
+        results, reqs = [], []
+        for doc_id, attrs in items:
+            results.append(self._full_doc_values(doc_id, attrs))
+            doc = self.corpus.docs[doc_id]
+            reqs.append(self._make_request(
+                f"Extract {', '.join(attrs)}. Document: {doc.text[:800]}"))
+        if reqs:
+            self._run_round(reqs)
+        return results

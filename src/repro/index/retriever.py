@@ -51,7 +51,7 @@ class TwoLevelRetriever:
                  tau_init: float = 1.7, gamma_init: float = 1.25,
                  rag_k: int = 3, threshold_slack: float = 0.1,
                  per_evidence_radius: bool = True,
-                 cluster_radius_floor: float = 1.15):
+                 cluster_radius_floor: float = 1.3):
         self.corpus = corpus
         self.embedder = embedder or HashedEmbedder()
         self.mode = mode
@@ -233,6 +233,21 @@ class TwoLevelRetriever:
 
     # ------------------------------------------------------ segment level --
 
+    def _probes_for(self, table: str, attr: str):
+        """(probes (P, D), radii length-P) for quest-family modes: evidence
+        cluster centers + the base query embedding ("evidence zero") — the
+        merge-and-dedup of paper §4.2 across all probes."""
+        st = self._state(table, attr)
+        qe = self._attr_query_emb(table, attr)
+        if st.probes is None:
+            return qe[None], [self.gamma_init]
+        probes = np.concatenate([st.probes, qe[None]], axis=0)
+        if self.per_evidence_radius and st.probe_radii is not None:
+            radii = list(st.probe_radii) + [self.gamma_init]
+        else:
+            radii = [st.gamma] * len(probes)
+        return probes, radii
+
     def _segments_for(self, doc_id, attr: str, table: str | None = None) -> list[Segment]:
         doc = self.corpus.docs[doc_id]
         table = table or doc.table   # evidence state belongs to the QUERY table
@@ -243,23 +258,47 @@ class TwoLevelRetriever:
         if self.mode == "rag_topk":
             (ids, _), = idx.search(self._attr_query_emb(table, attr), self.rag_k)
             return [segs[i] for i in sorted(ids)]
-        st = self._state(table, attr)
-        qe = self._attr_query_emb(table, attr)
-        if st.probes is None:
-            probes, radii = qe[None], [self.gamma_init]
-        else:
-            # evidence cluster centers + the base query embedding ("evidence
-            # zero"): the merge-and-dedup of paper §4.2 across all probes
-            probes = np.concatenate([st.probes, qe[None]], axis=0)
-            if self.per_evidence_radius and st.probe_radii is not None:
-                radii = list(st.probe_radii) + [self.gamma_init]
-            else:
-                radii = [st.gamma] * len(probes)
+        probes, radii = self._probes_for(table, attr)
         hit: set = set()
         for pe, rad in zip(probes, radii):
             ids, _ = idx.range_search(pe, rad)
             hit.update(ids)
         return [segs[i] for i in sorted(hit)]
+
+    def prefetch_segments(self, pairs) -> None:
+        """Batched retrieval (DESIGN.md §9): fill the segment cache for many
+        (doc_id, attr, table) pairs at once. All probes of all requested
+        attributes of one document go through a single vectorized
+        distance+rank pass (`range_search_many`) instead of one range search
+        per probe — per query the hits are identical to `segments`."""
+        todo: dict = {}
+        for doc_id, attr, table in pairs:
+            key = (doc_id, attr, table, self._version)
+            if key not in self._seg_cache and (doc_id, attr, table) not in todo:
+                todo[(doc_id, attr, table)] = key
+        by_doc: dict = {}
+        for (doc_id, attr, table), key in todo.items():
+            if self.mode in ("fulldoc", "rag_topk"):
+                self._seg_cache[key] = self._segments_for(doc_id, attr, table)
+            else:
+                by_doc.setdefault(doc_id, []).append((attr, table, key))
+        for doc_id, entries in by_doc.items():
+            segs = self.doc_segments[doc_id]
+            idx = self.seg_index[doc_id]
+            owners, probes_all, radii_all = [], [], []
+            for j, (attr, table, _key) in enumerate(entries):
+                t = table or self.corpus.docs[doc_id].table
+                probes, radii = self._probes_for(t, attr)
+                owners.extend([j] * len(probes))
+                probes_all.append(probes)
+                radii_all.extend(radii)
+            res = idx.range_search_many(np.concatenate(probes_all, axis=0),
+                                        radii_all)
+            hits: list[set] = [set() for _ in entries]
+            for j, (ids, _d) in zip(owners, res):
+                hits[j].update(ids)
+            for (attr, table, key), hit in zip(entries, hits):
+                self._seg_cache[key] = [segs[i] for i in sorted(hit)]
 
     def segments(self, doc_id, attr: str, table: str | None = None) -> list[str]:
         key = (doc_id, attr, table, self._version)

@@ -38,15 +38,40 @@ class ExactIndex:
             out.append(([self.ids[int(i)] for i in row_i], [float(d) for d in row_d]))
         return out
 
+    def _ranked(self, qs: np.ndarray):
+        """Full ascending ranking per query: (dists (M, N), idx (M, N)).
+        Large databases go through the `kernels.topk_l2` kernel with k = N
+        (same gate as kernels.ops.topk_l2); small ones use a numpy
+        broadcast. Serial and batched range search share this helper, so
+        they agree per query at every database size."""
+        if len(self.ids) >= 256:
+            dists, idx = _topk_l2(self.emb, qs, len(self.ids))
+            return np.asarray(dists), np.asarray(idx)
+        d = np.sqrt(np.maximum(
+            ((self.emb[None] - qs[:, None]) ** 2).sum(-1), 0.0))
+        idx = np.argsort(d, axis=1)
+        return np.take_along_axis(d, idx, axis=1), idx
+
     def range_search(self, q: np.ndarray, tau: float):
         """All ids with L2 distance < tau, sorted ascending by distance."""
+        (out,) = self.range_search_many(np.asarray(q, np.float32)[None], [tau])
+        return out
+
+    def range_search_many(self, qs: np.ndarray, taus):
+        """Batched range search: qs (M, D), taus length-M. One fused
+        distance + rank pass for the whole probe batch — the vectorized
+        path the cross-document scheduler uses to retrieve segments for a
+        batch of (doc, attr) pairs at once."""
+        qs = np.atleast_2d(np.asarray(qs, np.float32))
         if not len(self.ids):
-            return [], []
-        q = np.asarray(q, np.float32)
-        d = np.sqrt(np.maximum(((self.emb - q[None]) ** 2).sum(-1), 0.0))
-        order = np.argsort(d)
-        keep = [int(i) for i in order if d[i] < tau]
-        return [self.ids[i] for i in keep], [float(d[i]) for i in keep]
+            return [([], [])] * len(qs)
+        dists, idx = self._ranked(qs)
+        out = []
+        for row_d, row_i, tau in zip(dists, idx, taus):
+            keep = row_d < tau
+            out.append(([self.ids[int(i)] for i in row_i[keep]],
+                        [float(d) for d in row_d[keep]]))
+        return out
 
     def distance(self, q: np.ndarray, id_) -> float:
         i = self.ids.index(id_)

@@ -1,0 +1,11 @@
+"""Version compatibility for the Pallas TPU kernel layer.
+
+jax 0.5+ names the TPU compiler params `pltpu.CompilerParams`; 0.4.x
+`pltpu.TPUCompilerParams`. Kernels import the alias from here so a future
+rename is one edit (and no third-party module gets monkeypatched).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

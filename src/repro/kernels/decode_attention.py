@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -83,7 +85,7 @@ def decode_attention_pallas(q, k_cache, v_cache, length, *, bk=512,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, q, k_cache, v_cache)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -96,7 +98,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, bq=128, bk=128,
             pltpu.VMEM((bq, 1), jnp.float32),    # running denom
             pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref,
             h_scr, *, chunk: int, nc: int):
@@ -83,7 +85,7 @@ def ssm_scan_pallas(x, dt, A, B_mat, C_mat, D, h0=None, *, bd=256, chunk=64,
             jax.ShapeDtypeStruct((Bsz, di, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, B_mat, C_mat, D.reshape(1, di))

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 BIG = 1e30
 
 
@@ -85,7 +87,7 @@ def topk_l2_pallas(db, q, k: int, *, bm=8, bn=256, interpret=False):
             pltpu.VMEM((bm, k), jnp.float32),
             pltpu.VMEM((bm, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, db)

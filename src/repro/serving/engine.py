@@ -42,16 +42,22 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 queue_depth: Optional[int] = None):
+        """queue_depth: optional admission-control bound on queued requests;
+        ServedExtractor splits its batch rounds into windows of this size
+        (None = unbounded)."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        self.queue_depth = queue_depth
         self.queue: deque = deque()
         self.active: dict = {}          # slot -> Request
         self.finished: dict = {}
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "evictions": 0}
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "evictions": 0,
+                      "runs": 0, "max_live": 0, "decode_slot_steps": 0}
 
         self.cache = init_decode_cache(cfg, slots, max_len)
         self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
@@ -64,8 +70,23 @@ class ServingEngine:
     # ------------------------------------------------------------ intake --
 
     def submit(self, req: Request):
+        if self.queue_depth is not None and len(self.queue) >= self.queue_depth:
+            raise RuntimeError(
+                f"serving queue full ({len(self.queue)} >= {self.queue_depth})")
         req.submitted_s = time.time()
         self.queue.append(req)
+
+    def submit_many(self, reqs):
+        """All-or-nothing admission: never leaves a batch half-enqueued."""
+        reqs = list(reqs)
+        if self.queue_depth is not None and \
+                len(self.queue) + len(reqs) > self.queue_depth:
+            raise RuntimeError(
+                f"serving queue full ({len(self.queue)} + {len(reqs)} > "
+                f"{self.queue_depth})")
+        for req in reqs:
+            req.submitted_s = time.time()
+            self.queue.append(req)
 
     def _prefill_fn(self, length: int):
         if length not in self._prefill_cache:
@@ -108,6 +129,8 @@ class ServingEngine:
     def _step(self):
         logits, self.cache = self._decode(self.params, self._tokens, self.cache)
         self.stats["decode_steps"] += 1
+        self.stats["decode_slot_steps"] += len(self.active)
+        self.stats["max_live"] = max(self.stats["max_live"], len(self.active))
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])
@@ -134,6 +157,7 @@ class ServingEngine:
     # --------------------------------------------------------------- run ---
 
     def run(self, max_steps: int = 10_000):
+        self.stats["runs"] += 1
         while (self.queue or self.active) and max_steps > 0:
             max_steps -= 1
             while self.queue and not self._live.all():

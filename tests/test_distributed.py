@@ -95,6 +95,7 @@ def test_pod_grad_compression_parity():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.distributed.compression import compressed_pod_mean
+    from repro.distributed.sharding import shard_map
     from repro.launch.mesh import make_test_mesh
 
     mesh = make_test_mesh(2, 1, multi_pod=True)   # (pod=2, data=2, model=1)
@@ -107,9 +108,9 @@ def test_pod_grad_compression_parity():
 
     specs = {"w": P("pod", None), "b": P()}
     out_specs = {"w": P("pod", None), "b": P()}
-    fn = jax.jit(jax.shard_map(sync, mesh=mesh,
-                               in_specs=(specs,), out_specs=out_specs,
-                               check_vma=False))
+    fn = jax.jit(shard_map(sync, mesh=mesh,
+                           in_specs=(specs,), out_specs=out_specs,
+                           check_vma=False))
     gw = jax.device_put(g["w"], NamedSharding(mesh, P("pod", None)))
     res = fn({"w": gw, "b": g["b"]})
     # exact mean across pods, within int8 quantization error

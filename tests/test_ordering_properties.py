@@ -11,6 +11,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.expr import And, Filter, Or
