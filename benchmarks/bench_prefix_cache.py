@@ -1,0 +1,134 @@
+"""Prefix KV cache on/off over a multi-document QUEST extraction sweep
+(DESIGN.md §10).
+
+Workload: the scheduler-shaped batch of (doc, attr) extraction needs a
+QUEST plan emits over the synthetic SWDE corpus, run through the real
+serving engine twice — once with the shared-prefix KV cache off (the
+per-request full prefill of §7) and once with it on. Both paths must
+return byte-identical result rows and ledger token columns; the cache
+shows up only in engine prefill work and in the separately-reported
+savings columns.
+
+Acceptance target: >= 30% fewer prefill tokens with the cache on.
+Emits `benchmarks/out/BENCH_prefix_cache.json` (uploaded as a CI artifact
+per run, so the perf trajectory accumulates) plus a CSV of the sweep.
+
+`--smoke` runs the reduced CI-sized workload.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.ledger import CostLedger
+from repro.core.scheduler import BatchScheduler
+from repro.data import lm_data
+from repro.data.corpus import make_swde_corpus
+from repro.extract.served import ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+
+OUT = Path(__file__).parent / "out"
+ATTRS = ["tuition", "enrollment", "university_name"]
+
+
+def _items(corpus, n_docs: int):
+    docs = sorted(corpus.tables["universities"])[:n_docs]
+    return [(d, a, "universities") for d in docs for a in ATTRS]
+
+
+def _run_path(corpus, items, *, prefix_cache: bool, batch: int):
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, slots=batch, max_len=1024,
+                           prefix_cache=prefix_cache)
+    extractor = ServedExtractor(corpus, engine, max_new=8)
+    ledger = CostLedger()
+    retriever = TwoLevelRetriever(corpus, mode="rag_topk")
+    sched = BatchScheduler(retriever, extractor, ledger, {}, batch_size=batch)
+    t0 = time.time()
+    rows = sched.extract_many(items)
+    wall = time.time() - t0
+    return {
+        "rows": rows,
+        "wall_s": wall,
+        "prefill_tokens": engine.stats["prefill_tokens"],
+        "decode_steps": engine.stats["decode_steps"],
+        "prefix_hits": engine.stats["prefix_hits"],
+        "prefix_saved_tokens": engine.stats["prefix_saved_tokens"],
+        "prefix_inserts": engine.stats["prefix_inserts"],
+        "ledger": ledger.snapshot(),
+    }
+
+
+def run(quick: bool = False, smoke: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = quick or smoke
+    corpus = make_swde_corpus()
+    items = _items(corpus, 6 if small else 16)
+    batch = 4 if small else 8
+
+    off = _run_path(corpus, items, prefix_cache=False, batch=batch)
+    on = _run_path(corpus, items, prefix_cache=True, batch=batch)
+
+    rows_identical = on["rows"] == off["rows"]
+    led_on, led_off = on["ledger"], off["ledger"]
+    token_cols = ("input_tokens", "output_tokens", "total_tokens", "per_phase")
+    ledger_identical = all(led_on[c] == led_off[c] for c in token_cols)
+    saved_frac = 1.0 - on["prefill_tokens"] / max(off["prefill_tokens"], 1)
+
+    result = {
+        "bench": "prefix_cache",
+        "smoke": bool(small),
+        "items": len(items),
+        "batch": batch,
+        "prefill_tokens_off": off["prefill_tokens"],
+        "prefill_tokens_on": on["prefill_tokens"],
+        "prefill_saved_fraction": round(saved_frac, 4),
+        "prefix_hits": on["prefix_hits"],
+        "prefix_saved_tokens": on["prefix_saved_tokens"],
+        "prefix_inserts": on["prefix_inserts"],
+        "rows_identical": rows_identical,
+        "ledger_token_columns_identical": ledger_identical,
+        "wall_off_s": round(off["wall_s"], 3),
+        "wall_on_s": round(on["wall_s"], 3),
+    }
+    with open(OUT / "BENCH_prefix_cache.json", "w") as f:
+        json.dump(result, f, indent=2)
+    with open(OUT / "prefix_cache.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["path", "prefill_tokens", "decode_steps", "prefix_hits",
+                    "saved_tokens", "wall_s"])
+        w.writerow(["off", off["prefill_tokens"], off["decode_steps"], 0, 0,
+                    f"{off['wall_s']:.3f}"])
+        w.writerow(["on", on["prefill_tokens"], on["decode_steps"],
+                    on["prefix_hits"], on["prefix_saved_tokens"],
+                    f"{on['wall_s']:.3f}"])
+
+    print(f"prefix_cache: {len(items)} extractions | prefill tokens "
+          f"{off['prefill_tokens']} -> {on['prefill_tokens']} "
+          f"({saved_frac:.1%} saved, {on['prefix_hits']} hits) | "
+          f"rows identical: {rows_identical} | "
+          f"ledger token columns identical: {ledger_identical}")
+
+    assert rows_identical, "prefix cache changed result rows"
+    assert ledger_identical, "prefix cache leaked into ledger token columns"
+    assert saved_frac >= 0.30, (
+        f"prefill saving {saved_frac:.1%} below the 30% acceptance bar")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

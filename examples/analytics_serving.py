@@ -29,6 +29,8 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batch-size", type=int, default=None,
                     help="cross-document extraction batch (default: slots)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix KV reuse (DESIGN.md §10)")
     args = ap.parse_args()
 
     cfg = (get_config if args.full else get_smoke_config)(args.arch)
@@ -36,7 +38,8 @@ def main():
     print(f"serving {cfg.name} ({cfg.family}), d_model={cfg.d_model}, "
           f"layers={cfg.num_layers}")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, slots=args.slots, max_len=1024)
+    engine = ServingEngine(cfg, params, slots=args.slots, max_len=1024,
+                           prefix_cache=not args.no_prefix_cache)
 
     corpus = make_swde_corpus()
     retriever = TwoLevelRetriever(corpus)

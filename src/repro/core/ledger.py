@@ -22,6 +22,11 @@ class CostLedger:
     batches: int = 0
     batched_extractions: int = 0
     max_batch: int = 0
+    # prefix-KV-cache accounting (DESIGN.md §10): like batching, prefix
+    # reuse is a *serving* saving — the logical prompt is unchanged, so the
+    # token columns stay cache-invariant and the saving is reported apart
+    prefix_hits: int = 0
+    saved_prefill_tokens: int = 0
 
     def charge(self, *, inp: int, out: int = 0, calls: int = 1, phase: str = "query"):
         self.input_tokens += inp
@@ -34,6 +39,10 @@ class CostLedger:
         self.batches += 1
         self.batched_extractions += n
         self.max_batch = max(self.max_batch, n)
+
+    def record_prefix(self, hits: int, saved_tokens: int):
+        self.prefix_hits += hits
+        self.saved_prefill_tokens += saved_tokens
 
     @property
     def total_tokens(self) -> int:
@@ -50,6 +59,8 @@ class CostLedger:
             "batches": self.batches,
             "batched_extractions": self.batched_extractions,
             "max_batch": self.max_batch,
+            "prefix_hits": self.prefix_hits,
+            "saved_prefill_tokens": self.saved_prefill_tokens,
         }
 
     def merged(self, other: "CostLedger") -> "CostLedger":
@@ -61,6 +72,9 @@ class CostLedger:
         out.batches = self.batches + other.batches
         out.batched_extractions = self.batched_extractions + other.batched_extractions
         out.max_batch = max(self.max_batch, other.max_batch)
+        out.prefix_hits = self.prefix_hits + other.prefix_hits
+        out.saved_prefill_tokens = (self.saved_prefill_tokens +
+                                    other.saved_prefill_tokens)
         for d in (self.per_phase, other.per_phase):
             for k, v in d.items():
                 out.per_phase[k] = out.per_phase.get(k, 0) + v

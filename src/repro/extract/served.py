@@ -14,6 +14,13 @@ is documented in DESIGN.md §8.1.
 are submitted together and drained by a *single* `engine.run()`, so the
 engine's slots stay full and prefill/decode interleave across documents —
 the serial `extract` path drains the engine once per extraction instead.
+
+Prompts are ordered shared-part-first (DESIGN.md §10): the static task
+template + attribute name + description come before the per-document
+evidence, and `Request.shared_len` marks that boundary, so an engine with
+the prefix KV cache enabled prefills the template once per attribute and
+only the evidence tail per document. The byte-level tokenizer makes the
+boundary exact (`encode(a + b) == encode(a) + encode(b)`).
 """
 from __future__ import annotations
 
@@ -33,6 +40,8 @@ class ServedStats:
     generated_tokens: int = 0
     batches: int = 0          # extract_batch rounds (one engine.run() each)
     max_batch: int = 0
+    prefix_hits: int = 0               # engine prefix-cache hits for our reqs
+    saved_prefill_tokens: int = 0      # prefill tokens skipped via those hits
 
 
 class ServedExtractor:
@@ -47,13 +56,27 @@ class ServedExtractor:
 
     # ------------------------------------------------------------ serving --
 
-    def _make_request(self, prompt_text: str) -> Request:
-        toks = lm_data.encode(prompt_text)[: 4 * MAX_PROMPT_TOKENS]
+    def _prompt_prefix(self, doc_id, attr: str) -> str:
+        """Shareable prompt head: identical for every document of an
+        attribute, so it prefix-caches across the whole corpus sweep."""
+        table = self.corpus.docs[doc_id].table
+        desc = self.corpus.attr_description(table, attr)
+        return (f"Task: report the value of one attribute from document "
+                f"evidence. Attribute: {attr} ({desc}). "
+                f"Answer with the value only. Evidence: ")
+
+    def _make_request(self, prefix_text: str, tail_text: str) -> Request:
+        """Build a request from (shareable prefix, per-request tail); the
+        tail is truncated to the token budget, never the prefix boundary."""
+        cap = 4 * MAX_PROMPT_TOKENS
+        prefix = lm_data.encode(prefix_text)[:cap]
+        toks = prefix + lm_data.encode(tail_text)[:cap - len(prefix)]
         self._rid += 1
         self.stats.requests += 1
         self.stats.prompt_tokens += len(toks)
         return Request(rid=self._rid, prompt=toks or [lm_data.BOS],
-                       max_new=self.max_new, eos_id=lm_data.EOS)
+                       max_new=self.max_new, eos_id=lm_data.EOS,
+                       shared_len=min(len(prefix), max(len(toks) - 1, 0)))
 
     def _run_round(self, reqs: list) -> dict:
         """Submit N requests, drain with one continuous-batching run per
@@ -61,6 +84,8 @@ class ServedExtractor:
         many requests may be queued at once)."""
         window = self.engine.queue_depth or len(reqs)
         outs = {}
+        es = self.engine.stats
+        hits0, saved0 = es["prefix_hits"], es["prefix_saved_tokens"]
         for i in range(0, len(reqs), max(window, 1)):
             chunk = reqs[i:i + max(window, 1)]
             self.engine.submit_many(chunk)
@@ -68,13 +93,20 @@ class ServedExtractor:
             self.stats.batches += 1
             self.stats.max_batch = max(self.stats.max_batch, len(chunk))
             for req in chunk:
+                if req.rid not in done:            # retry cap exceeded
+                    failed = self.engine.failed.get(req.rid)
+                    raise RuntimeError(
+                        f"extraction request {req.rid} failed: "
+                        f"{failed.error if failed else 'not in finished set'}")
                 out = done[req.rid].out
                 self.stats.generated_tokens += len(out)
                 outs[req.rid] = lm_data.decode(out)
+        self.stats.prefix_hits += es["prefix_hits"] - hits0
+        self.stats.saved_prefill_tokens += es["prefix_saved_tokens"] - saved0
         return outs
 
-    def _generate(self, prompt_text: str) -> str:
-        req = self._make_request(prompt_text)
+    def _generate(self, prefix_text: str, tail_text: str) -> str:
+        req = self._make_request(prefix_text, tail_text)
         return self._run_round([req])[req.rid]
 
     # ------------------------------------------------------------ parsing --
@@ -110,7 +142,8 @@ class ServedExtractor:
             if not text:
                 results[i] = (None, 0)
                 continue
-            req = self._make_request(f"Extract {attr}. Context: {text} Answer:")
+            req = self._make_request(self._prompt_prefix(doc_id, attr),
+                                     f"{text} Answer:")
             reqs.append(req)
             meta.append((i, doc_id, attr, text, count_tokens(text), req.rid))
         if reqs:
@@ -136,13 +169,15 @@ class ServedExtractor:
 
     def extract_full_doc_batch(self, items: list):
         """Sampling phase, batched: one real engine round represents the
-        full-document analysis prompts of the whole chunk."""
+        full-document analysis prompts of the whole chunk (shared attrs
+        template first, document text last — same prefix-reuse shape)."""
         results, reqs = [], []
         for doc_id, attrs in items:
             results.append(self._full_doc_values(doc_id, attrs))
             doc = self.corpus.docs[doc_id]
             reqs.append(self._make_request(
-                f"Extract {', '.join(attrs)}. Document: {doc.text[:800]}"))
+                f"Task: extract {', '.join(attrs)}. Document: ",
+                doc.text[:800]))
         if reqs:
             self._run_round(reqs)
         return results

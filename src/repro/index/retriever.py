@@ -19,7 +19,7 @@ from repro.data.tokens import count_tokens
 from .embedder import HashedEmbedder
 from .kmeans import kmeans
 from .segmenter import Segment, key_sentences, segment_document
-from .vector_index import ExactIndex
+from .vector_index import ExactIndex, IVFIndex
 
 
 def synth_evidence_texts(attr: str, description: str) -> list[str]:
@@ -51,7 +51,9 @@ class TwoLevelRetriever:
                  tau_init: float = 1.7, gamma_init: float = 1.25,
                  rag_k: int = 3, threshold_slack: float = 0.1,
                  per_evidence_radius: bool = True,
-                 cluster_radius_floor: float = 1.3):
+                 cluster_radius_floor: float = 1.3,
+                 approx_threshold: int = 2048,
+                 ivf_n_lists: int = 64, ivf_nprobe: int = 8):
         self.corpus = corpus
         self.embedder = embedder or HashedEmbedder()
         self.mode = mode
@@ -62,6 +64,11 @@ class TwoLevelRetriever:
         self.slack = threshold_slack
         self.per_evidence_radius = per_evidence_radius and mode == "quest"
         self.cluster_radius_floor = cluster_radius_floor
+        # stores at/above this many vectors use the approximate IVF index
+        # (exact below it — small corpora keep bit-identical retrieval)
+        self.approx_threshold = approx_threshold
+        self.ivf_n_lists = ivf_n_lists
+        self.ivf_nprobe = ivf_nprobe
         self._version = 0
         self._attr_state: dict = {}         # (table, attr) -> _AttrState
         self._tau: dict = {}                # table -> refined tau
@@ -91,6 +98,14 @@ class TwoLevelRetriever:
 
     # ------------------------------------------------------------- build --
 
+    def _make_index(self, embs: np.ndarray, ids: list):
+        """Exact store below `approx_threshold` vectors, IVF at corpus
+        scale — both satisfy the same batched search contract."""
+        if len(ids) >= self.approx_threshold:
+            return IVFIndex(embs, ids, n_lists=self.ivf_n_lists,
+                            nprobe=self.ivf_nprobe)
+        return ExactIndex(embs, ids)
+
     def _build(self):
         self.doc_segments: dict = {}
         self.seg_index: dict = {}
@@ -106,8 +121,8 @@ class TwoLevelRetriever:
         for doc_id in doc_ids:
             segs = self.doc_segments[doc_id]
             embs = self.embedder.embed([s.text for s in segs])
-            self.seg_index[doc_id] = ExactIndex(embs, list(range(len(segs))))
-        self.doc_index = ExactIndex(self.embedder.embed(summaries), doc_ids)
+            self.seg_index[doc_id] = self._make_index(embs, list(range(len(segs))))
+        self.doc_index = self._make_index(self.embedder.embed(summaries), doc_ids)
         self._doc_emb = {d: self.doc_index.emb[i] for i, d in enumerate(doc_ids)}
 
     # ------------------------------------------------------------ helpers --
@@ -138,8 +153,13 @@ class TwoLevelRetriever:
             return sorted(table_docs)
         qe = self._query_emb(table, attrs)
         if self.mode in ("segment_only", "rag_topk"):
-            ids, _ = self.doc_index.range_search(qe, 10.0)   # rank, no filter
-            return [d for d in ids if d in table_docs]
+            # rank, no filter: computed exactly over the stored doc
+            # embeddings — an approximate doc_index (IVF at scale) must not
+            # silently drop the unprobed documents these modes never prune
+            docs = sorted(table_docs)
+            dist = np.linalg.norm(
+                np.stack([self._doc_emb[d] for d in docs]) - qe[None], axis=1)
+            return [docs[i] for i in np.argsort(dist, kind="stable")]
         tau = self._tau.get(table, self.tau_init)
         center = self._doc_center.get(table, qe)
         ids, _ = self.doc_index.range_search(center, tau)

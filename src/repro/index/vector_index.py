@@ -2,8 +2,11 @@
 monotonically equivalent to cosine ranking).
 
 `ExactIndex` is the oracle; `IVFIndex` (k-means coarse quantizer + nprobe)
-is the scalable variant used at corpus scale. Both expose `search` (top-k)
-and `range_search` (distance threshold tau/gamma). The hot loop delegates to
+is the scalable variant used at corpus scale. Both expose the same batched
+contract — `search` (top-k), `range_search` (distance threshold tau/gamma),
+and `range_search_many` (one fused pass over a probe batch, the API the
+cross-document scheduler's `prefetch_segments` drives) — so either can back
+a `TwoLevelRetriever` store. The hot loop delegates to
 `repro.kernels.ops.topk_l2` (Pallas on TPU, jnp elsewhere).
 """
 from __future__ import annotations
@@ -16,6 +19,11 @@ from .kmeans import kmeans
 def _topk_l2(db: np.ndarray, q: np.ndarray, k: int):
     from repro.kernels import ops
     return ops.topk_l2(db, q, k)
+
+
+def _exact_distance(emb: np.ndarray, ids: list, q: np.ndarray, id_) -> float:
+    i = ids.index(id_)
+    return float(np.sqrt(((emb[i] - q) ** 2).sum()))
 
 
 class ExactIndex:
@@ -74,8 +82,7 @@ class ExactIndex:
         return out
 
     def distance(self, q: np.ndarray, id_) -> float:
-        i = self.ids.index(id_)
-        return float(np.sqrt(((self.emb[i] - q) ** 2).sum()))
+        return _exact_distance(self.emb, self.ids, q, id_)
 
 
 class IVFIndex:
@@ -94,6 +101,9 @@ class IVFIndex:
         self.centers, assign = kmeans(self.emb, n_lists, seed=seed)
         self.lists = [np.where(assign == c)[0] for c in range(len(self.centers))]
 
+    def __len__(self):
+        return len(self.ids)
+
     def _probe(self, q: np.ndarray) -> np.ndarray:
         d = ((self.centers - q[None]) ** 2).sum(-1)
         lists = np.argsort(d)[: self.nprobe]
@@ -101,26 +111,51 @@ class IVFIndex:
         rows = [r for r in rows if len(r)]
         return np.concatenate(rows) if rows else np.zeros((0,), np.int64)
 
+    def _ranked_rows(self, q: np.ndarray):
+        """Probed rows of one query, ranked ascending by distance: (rows,
+        dists). Large probe sets go through the `kernels.topk_l2` kernel
+        with k = |probed| (the same gate as `ExactIndex._ranked`); small
+        ones use a numpy broadcast. `search`/`range_search`/
+        `range_search_many` all share this helper."""
+        rows = self._probe(q)
+        if not len(rows):
+            return rows, np.zeros((0,), np.float32)
+        sub = self.emb[rows]
+        if len(rows) >= 256:
+            dists, idx = _topk_l2(sub, q[None], len(rows))
+            d, order = np.asarray(dists)[0], np.asarray(idx)[0]
+        else:
+            d = np.sqrt(np.maximum(((sub - q[None]) ** 2).sum(-1), 0.0))
+            order = np.argsort(d)
+            d = d[order]
+        return rows[order], d
+
     def search(self, q: np.ndarray, k: int):
         q = np.atleast_2d(np.asarray(q, np.float32))
         out = []
         for qq in q:
-            rows = self._probe(qq)
-            if not len(rows):
-                out.append(([], []))
-                continue
-            d = np.sqrt(np.maximum(((self.emb[rows] - qq[None]) ** 2).sum(-1), 0.0))
-            order = np.argsort(d)[: min(k, len(rows))]
-            out.append(([self.ids[int(rows[i])] for i in order],
-                        [float(d[i]) for i in order]))
+            rows, d = self._ranked_rows(qq)
+            n = min(k, len(rows))
+            out.append(([self.ids[int(r)] for r in rows[:n]],
+                        [float(x) for x in d[:n]]))
         return out
 
     def range_search(self, q: np.ndarray, tau: float):
-        q = np.asarray(q, np.float32)
-        rows = self._probe(q)
-        if not len(rows):
-            return [], []
-        d = np.sqrt(np.maximum(((self.emb[rows] - q[None]) ** 2).sum(-1), 0.0))
-        order = np.argsort(d)
-        keep = [i for i in order if d[i] < tau]
-        return [self.ids[int(rows[i])] for i in keep], [float(d[i]) for i in keep]
+        (out,) = self.range_search_many(np.asarray(q, np.float32)[None], [tau])
+        return out
+
+    def range_search_many(self, qs: np.ndarray, taus):
+        """Batched range search over the probed lists: qs (M, D), taus
+        length-M. Same contract as `ExactIndex.range_search_many` (the
+        scheduler's vectorized retrieval path), approximate by nprobe."""
+        qs = np.atleast_2d(np.asarray(qs, np.float32))
+        out = []
+        for qq, tau in zip(qs, taus):
+            rows, d = self._ranked_rows(qq)
+            keep = d < tau
+            out.append(([self.ids[int(r)] for r in rows[keep]],
+                        [float(x) for x in d[keep]]))
+        return out
+
+    def distance(self, q: np.ndarray, id_) -> float:
+        return _exact_distance(self.emb, self.ids, q, id_)

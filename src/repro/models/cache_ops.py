@@ -1,0 +1,82 @@
+"""Decode-cache pytree surgery: slot slicing/merging and prefix snapshots.
+
+The serving engine keeps one batched decode cache (leading layer axis,
+batch axis 1 — see `init_decode_cache`); requests prefill into a B=1
+sub-cache which is then merged into their slot. The shared-prefix KV cache
+(`serving/prefix_cache.py`) additionally stores *trimmed* B=1 sub-caches:
+length-indexed buffers (`k`/`v`/`ckv`/`krope`, token axis 2) are sliced to
+the prefix length so a snapshot costs O(prefix) memory, while pure-state
+buffers (SSM `conv`/`ssm`, enc-dec `ck`/`cv`) are kept whole — they are the
+exact recurrent/cross state *after* the prefix, which is why snapshots must
+be taken by prefilling exactly the prefix (never by slicing a longer
+prompt's final state).
+
+Attention masks in decode are gated by `pos` (`layers.attn_decode_apply`
+masks `kv_pos < pos+1`), so the zero tail a restored snapshot is padded
+with is never attended to.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Buffers indexed by token position on axis 2 ((L, B, max_len, ...)); all
+# other cache entries are per-slot state copied whole.
+LENGTH_KEYS = ("k", "v", "ckv", "krope")
+
+
+def slot_cache(cache: dict, slot: int) -> dict:
+    """Extract one slot of a batched decode cache as a B=1 sub-cache."""
+    sub = {}
+    for k, a in cache.items():
+        if k == "pos":
+            sub[k] = a[slot] if a.ndim else a
+        else:
+            sub[k] = a[:, slot:slot + 1]
+    return sub
+
+
+def write_slot(cache: dict, sub: dict, slot: int) -> dict:
+    """Merge a B=1 sub-cache into `slot` of a batched decode cache."""
+    out = dict(cache)
+    for k in cache:
+        if k == "pos":
+            pos = cache["pos"]
+            out[k] = (pos.at[slot].set(jnp.asarray(sub["pos"], pos.dtype))
+                      if pos.ndim else jnp.asarray(sub["pos"], pos.dtype))
+        else:
+            out[k] = cache[k].at[:, slot].set(sub[k][:, 0].astype(cache[k].dtype))
+    return out
+
+
+def prefix_snapshot(sub: dict, prefix_len: int) -> dict:
+    """Trim a B=1 sub-cache (taken right after prefilling exactly the
+    prefix) to O(prefix_len) storage."""
+    snap = {}
+    for k, a in sub.items():
+        if k == "pos":
+            snap[k] = jnp.asarray(prefix_len, jnp.int32)
+        elif k in LENGTH_KEYS:
+            snap[k] = a[:, :, :prefix_len]
+        else:
+            snap[k] = a
+    return snap
+
+
+def expand_snapshot(snap: dict, max_len: int) -> dict:
+    """Zero-pad a trimmed snapshot's token axes back to `max_len` so it is
+    shape-compatible with the engine's decode cache."""
+    sub = {}
+    for k, a in snap.items():
+        if k in LENGTH_KEYS and a.shape[2] < max_len:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, max_len - a.shape[2])
+            sub[k] = jnp.pad(a, pad)
+        else:
+            sub[k] = a
+    return sub
+
+
+def cache_nbytes(tree: dict) -> int:
+    """Device bytes held by a cache pytree (for eviction budgets)."""
+    return sum(int(a.size) * a.dtype.itemsize
+               for a in tree.values() if hasattr(a, "size"))

@@ -7,8 +7,25 @@ Finished rows free their slot immediately for queued requests — the
 "extraction operator fleet" behaviour QUEST's per-document plans produce
 (heterogeneous short extraction calls).
 
+Shared-prefix KV reuse (DESIGN.md §10): with `prefix_cache` enabled, a
+request that declares a shareable prompt boundary (`Request.shared_len`)
+prefills in two phases — the shared prefix through the standard prefill
+(snapshotted into the cache the first time), then the per-request suffix
+token-by-token through the decode step, which is exact for every family
+(attention KV is position-indexed; SSM/conv state advances through the
+same recurrence decode uses). A later request whose prompt extends a
+cached prefix copies the snapshot into its slot and prefills only the
+unshared suffix. Saved prefill tokens are reported separately
+(`stats["prefix_saved_tokens"]`); decoded outputs are identical with the
+cache on or off (tests/test_prefix_cache.py).
+
 Fault tolerance: `drain_slot` evicts a request (e.g. on a simulated worker
-failure) and requeues it; the scheduler resubmits from the prompt.
+failure) and requeues it; the scheduler resubmits from the prompt. Retries
+are bounded by `Request.max_retries` — beyond it the request fails visibly
+into `engine.failed` instead of looping forever. `run()` raises
+`RunTruncated` (strict default) when `max_steps` is exhausted with work
+still queued/active, so callers can never mistake partial results for
+complete ones.
 """
 from __future__ import annotations
 
@@ -16,15 +33,17 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decode_step, init_decode_cache, prefill
+from repro.models.cache_ops import expand_snapshot, prefix_snapshot, write_slot
 from repro.models.config import ModelConfig
 from repro.data import lm_data
+from .prefix_cache import PrefixCache
 
 
 @dataclass
@@ -33,31 +52,55 @@ class Request:
     prompt: list
     max_new: int = 16
     eos_id: int = lm_data.EOS
+    shared_len: int = 0      # prompt[:shared_len] is shareable across requests
+    max_retries: int = 3     # drain_slot evictions tolerated before failing
     out: list = field(default_factory=list)
     done: bool = False
     submitted_s: float = 0.0
     finished_s: float = 0.0
     retries: int = 0
+    error: Optional[str] = None
+
+
+class RunTruncated(RuntimeError):
+    """`run()` exhausted max_steps with requests still queued/active."""
+
+    def __init__(self, msg: str, finished: dict):
+        super().__init__(msg)
+        self.finished = finished
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
-                 queue_depth: Optional[int] = None):
+                 queue_depth: Optional[int] = None,
+                 prefix_cache: Union[bool, PrefixCache, None] = False,
+                 prefix_min_len: int = 8):
         """queue_depth: optional admission-control bound on queued requests;
         ServedExtractor splits its batch rounds into windows of this size
-        (None = unbounded)."""
+        (None = unbounded).
+        prefix_cache: shared-prefix KV reuse — False/None off, True for a
+        default `PrefixCache()`, or a configured instance.
+        prefix_min_len: shortest prefix worth snapshotting/copying."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
         self.queue_depth = queue_depth
+        if isinstance(prefix_cache, PrefixCache):   # may be empty, i.e. falsy
+            self.prefix_cache: Optional[PrefixCache] = prefix_cache
+        else:
+            self.prefix_cache = PrefixCache() if prefix_cache else None
+        self.prefix_min_len = max(1, int(prefix_min_len))
         self.queue: deque = deque()
         self.active: dict = {}          # slot -> Request
         self.finished: dict = {}
+        self.failed: dict = {}          # rid -> Request (retry cap exceeded)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0, "evictions": 0,
-                      "runs": 0, "max_live": 0, "decode_slot_steps": 0}
+                      "runs": 0, "max_live": 0, "decode_slot_steps": 0,
+                      "prefix_hits": 0, "prefix_saved_tokens": 0,
+                      "prefix_inserts": 0, "truncations": 0, "failures": 0}
 
         self.cache = init_decode_cache(cfg, slots, max_len)
         self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
@@ -94,8 +137,12 @@ class ServingEngine:
                 partial(prefill, self.cfg, max_len=self.max_len))
         return self._prefill_cache[length]
 
-    def _insert(self, slot: int, req: Request):
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+    # ----------------------------------------------------------- prefill --
+
+    def _prefill_sub(self, tokens: list):
+        """Standard exact-length prefill of `tokens` into a B=1 sub-cache.
+        Returns (last-position logits, sub-cache)."""
+        toks = jnp.asarray(tokens, jnp.int32)[None, :]
         batch = {"tokens": toks}
         if self.cfg.family == "encdec":
             batch["frames"] = jnp.zeros((1, self.cfg.encoder_seq, self.cfg.d_model),
@@ -104,20 +151,49 @@ class ServingEngine:
             from repro.models.model import VISION_DIM
             batch["image_embeds"] = jnp.zeros((1, self.cfg.n_image_tokens, VISION_DIM),
                                               jnp.float32)
-        logits, c1 = self._prefill_fn(toks.shape[1])(self.params, batch)
-        self.stats["prefill_tokens"] += toks.shape[1]
+        return self._prefill_fn(toks.shape[1])(self.params, batch)
 
-        def put(dst, src):
-            # stacked caches: (L, B, ...) — batch dim is axis 1
-            return dst.at[:, slot].set(src[:, 0])
+    def _suffix_prefill(self, sub: dict, tokens: list):
+        """Advance a B=1 sub-cache through the unshared prompt suffix, one
+        exact decode step per token (position-indexed KV writes; the same
+        recurrence decode uses, so SSM/conv state stays correct). Returns
+        (last-token logits, sub-cache)."""
+        logits = None
+        for t in tokens:
+            logits, sub = self._decode(self.params,
+                                       jnp.asarray([[t]], jnp.int32), sub)
+        return logits, sub
 
-        new_cache = dict(self.cache)
-        for k in self.cache:
-            if k == "pos":
-                continue
-            new_cache[k] = put(self.cache[k], c1[k])
-        new_cache["pos"] = self.cache["pos"].at[slot].set(int(c1["pos"]))
-        self.cache = new_cache
+    def _insert(self, slot: int, req: Request):
+        prompt = req.prompt
+        assert len(prompt) <= self.max_len, (
+            f"prompt ({len(prompt)}) exceeds cache max_len={self.max_len}")
+        sub, prefix_len = None, 0
+        if self.prefix_cache is not None:
+            entry = self.prefix_cache.match(prompt)
+            if entry is not None and len(entry.tokens) >= self.prefix_min_len:
+                prefix_len = len(entry.tokens)
+                sub = expand_snapshot(entry.cache, self.max_len)
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_saved_tokens"] += prefix_len
+            else:
+                # first request of a prefix group: prefill the shared prefix
+                # exactly (state-correct snapshot boundary), then continue
+                boundary = min(int(req.shared_len), len(prompt) - 1)
+                if boundary >= self.prefix_min_len:
+                    _, sub = self._prefill_sub(prompt[:boundary])
+                    self.stats["prefill_tokens"] += boundary
+                    self.prefix_cache.insert(
+                        prompt[:boundary], prefix_snapshot(sub, boundary))
+                    self.stats["prefix_inserts"] += 1
+                    prefix_len = boundary
+        if sub is None:
+            logits, sub = self._prefill_sub(prompt)
+            self.stats["prefill_tokens"] += len(prompt)
+        else:
+            logits, sub = self._suffix_prefill(sub, prompt[prefix_len:])
+            self.stats["prefill_tokens"] += len(prompt) - prefix_len
+        self.cache = write_slot(self.cache, sub, slot)
         nxt = int(jnp.argmax(logits[0, -1]))
         self._tokens = self._tokens.at[slot, 0].set(nxt)
         req.out.append(nxt)
@@ -145,18 +221,30 @@ class ServingEngine:
         self._tokens = jnp.asarray(nxt[:, None], jnp.int32)
 
     def drain_slot(self, slot: int):
-        """Evict + requeue (straggler/failure mitigation)."""
+        """Evict + requeue (straggler/failure mitigation). Retries are
+        bounded: past `req.max_retries` the request fails visibly into
+        `self.failed` instead of requeueing forever."""
         if slot in self.active:
             req = self.active.pop(slot)
             self._live[slot] = False
             req.out.clear()
             req.retries += 1
             self.stats["evictions"] += 1
-            self.queue.appendleft(req)
+            if req.retries > req.max_retries:
+                req.error = (f"evicted {req.retries} times "
+                             f"(max_retries={req.max_retries})")
+                self.failed[req.rid] = req
+                self.stats["failures"] += 1
+            else:
+                self.queue.appendleft(req)
 
     # --------------------------------------------------------------- run ---
 
-    def run(self, max_steps: int = 10_000):
+    def run(self, max_steps: int = 10_000, *, strict: bool = True):
+        """Drain the queue. If `max_steps` is exhausted with requests still
+        queued/active the run is *truncated*: stats["truncations"] is bumped
+        and, under `strict` (default), `RunTruncated` is raised — partial
+        results must never read as complete."""
         self.stats["runs"] += 1
         while (self.queue or self.active) and max_steps > 0:
             max_steps -= 1
@@ -165,4 +253,11 @@ class ServingEngine:
                 self._insert(slot, self.queue.popleft())
             if self.active:
                 self._step()
+        if self.queue or self.active:
+            self.stats["truncations"] += 1
+            if strict:
+                raise RunTruncated(
+                    f"run() truncated at max_steps with {len(self.active)} "
+                    f"active and {len(self.queue)} queued requests",
+                    self.finished)
         return self.finished

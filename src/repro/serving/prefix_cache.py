@@ -1,0 +1,109 @@
+"""Shared-prefix KV cache: longest-prefix-match store over prompt tokens.
+
+QUEST plans issue hundreds of extraction calls whose prompts share a long
+template prefix (instruction + attribute description + evidence header) and
+differ only in the per-document tail (`extract/served.py` orders prompts
+that way on purpose). Each stored entry maps a token prefix to the B=1
+decode-cache snapshot obtained by prefilling *exactly* that prefix
+(`models.cache_ops.prefix_snapshot`): attention KV sliced to the prefix,
+SSM/conv state taken at the prefix boundary — so a hit is state-correct for
+every model family, not just attention.
+
+Entries live at explicit boundaries (`Request.shared_len`), so the store is
+a radix-style trie whose every path is a single compressed edge:
+`match(prompt)` returns the deepest stored node whose token path is a
+*proper* prefix of the prompt (proper, because at least one suffix token
+must be prefilled to produce the first-output logits). Lookup scans the
+(small, LRU-bounded) entry table and compares token runs — O(entries ×
+prefix) integer comparisons, cheap next to a single prefill step.
+
+Eviction is LRU over both knobs: `max_entries` and, when set, `max_bytes`
+of snapshot storage (`cache_ops.cache_nbytes`).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.models.cache_ops import cache_nbytes
+
+
+@dataclass
+class PrefixEntry:
+    tokens: tuple                 # the prefix token path
+    cache: dict                   # trimmed B=1 snapshot (see cache_ops)
+    nbytes: int
+    hits: int = 0
+
+
+@dataclass
+class PrefixCacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    saved_tokens: int = 0         # prefill tokens skipped via hits
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class PrefixCache:
+    def __init__(self, *, max_entries: int = 32,
+                 max_bytes: Optional[int] = None):
+        self.max_entries = max(1, int(max_entries))
+        self.max_bytes = max_bytes
+        self.stats = PrefixCacheStats()
+        self._entries: "OrderedDict[tuple, PrefixEntry]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    # ------------------------------------------------------------ lookup --
+
+    def match(self, prompt: list) -> Optional[PrefixEntry]:
+        """Deepest entry whose path is a proper prefix of `prompt`."""
+        best = None
+        n = len(prompt)
+        for key, entry in self._entries.items():
+            k = len(key)
+            if k < n and (best is None or k > len(best.tokens)) \
+                    and tuple(prompt[:k]) == key:
+                best = entry
+        if best is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(best.tokens)       # LRU touch
+        best.hits += 1
+        self.stats.hits += 1
+        self.stats.saved_tokens += len(best.tokens)
+        return best
+
+    # ------------------------------------------------------------ insert --
+
+    def insert(self, prefix: list, snapshot: dict) -> PrefixEntry:
+        key = tuple(prefix)
+        if key in self._entries:                     # refresh, don't duplicate
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        entry = PrefixEntry(tokens=key, cache=snapshot,
+                            nbytes=cache_nbytes(snapshot))
+        self._entries[key] = entry
+        self.stats.inserts += 1
+        self._evict()
+        return entry
+
+    def _evict(self) -> None:
+        while len(self._entries) > self.max_entries or (
+                self.max_bytes is not None and self.nbytes > self.max_bytes
+                and len(self._entries) > 1):
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()

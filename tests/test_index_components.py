@@ -99,6 +99,86 @@ def test_ivf_recall_reasonable():
     assert hits / (20 * 5) >= 0.6        # nprobe=6/16 should recall most
 
 
+def test_ivf_batched_range_search_matches_serial():
+    """`range_search_many` is the batched-retrieval API the scheduler's
+    `prefetch_segments` drives; IVF must answer it identically to a loop of
+    serial `range_search` calls (regression: it used to be missing)."""
+    rng = np.random.default_rng(2)
+    emb = rng.normal(size=(400, 16)).astype(np.float32)
+    ivf = IVFIndex(emb, n_lists=8, nprobe=3)
+    qs = rng.normal(size=(5, 16)).astype(np.float32)
+    taus = [2.0, 3.5, 5.0, 1.0, 4.2]
+    many = ivf.range_search_many(qs, taus)
+    for (mids, mds), q, tau in zip(many, qs, taus):
+        sids, sds = ivf.range_search(q, tau)
+        assert mids == sids
+        np.testing.assert_allclose(mds, sds, rtol=1e-5, atol=1e-5)
+        # distances really honour the threshold and come back sorted
+        assert all(d < tau for d in mds)
+        assert mds == sorted(mds)
+
+
+def test_ivf_full_probe_equals_exact_range_search():
+    rng = np.random.default_rng(3)
+    emb = rng.normal(size=(200, 16)).astype(np.float32)
+    exact = ExactIndex(emb)
+    ivf = IVFIndex(emb, n_lists=8, nprobe=8)     # probe everything
+    q = rng.normal(size=(16,)).astype(np.float32)
+    eids, _ = exact.range_search(q, 3.0)
+    aids, _ = ivf.range_search(q, 3.0)
+    assert set(aids) == set(eids)
+
+
+def test_ivf_recall_improves_with_nprobe():
+    rng = np.random.default_rng(4)
+    emb = rng.normal(size=(512, 24)).astype(np.float32)
+    exact = ExactIndex(emb)
+    qs = rng.normal(size=(15, 24)).astype(np.float32)
+
+    def recall(nprobe):
+        ivf = IVFIndex(emb, n_lists=16, nprobe=nprobe)
+        hit = 0
+        for q in qs:
+            (eids, _), = exact.search(q, 5)
+            (aids, _), = ivf.search(q, 5)
+            hit += len(set(eids) & set(aids))
+        return hit / (len(qs) * 5)
+
+    r1, r4, r16 = recall(1), recall(4), recall(16)
+    assert r1 <= r4 + 1e-9 <= r16 + 2e-9
+    assert r16 == 1.0                            # full probe == exact
+
+
+def test_retriever_selects_ivf_at_scale():
+    """Above `approx_threshold` vectors the retriever backs its stores with
+    IVF (regression: it hardcoded ExactIndex, so any batched caller crashed
+    at corpus scale); below it, exact stays the default."""
+    corpus = make_wiki_corpus(0)
+    small = TwoLevelRetriever(corpus)
+    assert isinstance(small.doc_index, ExactIndex)
+    approx = TwoLevelRetriever(corpus, approx_threshold=1,
+                               ivf_n_lists=4, ivf_nprobe=4)
+    assert isinstance(approx.doc_index, IVFIndex)
+    assert all(isinstance(ix, IVFIndex) for ix in approx.seg_index.values())
+    # the whole retrieval surface works on the approximate store,
+    # including the batched prefetch path
+    docs = approx.candidate_docs("players", ["age"])
+    assert docs
+    pairs = [(docs[0], "age", "players"), (docs[0], "ppg", "players")]
+    approx.prefetch_segments(pairs)
+    segs = approx.segments(docs[0], "age", "players")
+    assert isinstance(segs, list)
+    # nprobe == n_lists probes every list -> identical hits to exact
+    exact_segs = small.segments(docs[0], "age", "players")
+    assert segs == exact_segs
+    # the "rank, no filter" modes must still return EVERY table document
+    # when the doc store is approximate (IVF probes a subset of lists)
+    rag = TwoLevelRetriever(corpus, mode="rag_topk", approx_threshold=1,
+                            ivf_n_lists=8, ivf_nprobe=1)
+    ranked = rag.candidate_docs("players", ["age"])
+    assert set(ranked) == set(corpus.tables["players"])
+
+
 def test_kmeans_clusters_separate_data():
     rng = np.random.default_rng(1)
     a = rng.normal(loc=0.0, size=(50, 8))

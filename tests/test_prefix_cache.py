@@ -1,0 +1,205 @@
+"""Shared-prefix KV reuse (DESIGN.md §10): semantics tests.
+
+The prefix cache is a serving-layer saving only — with it on or off the
+engine must decode byte-identical outputs, the extractor must return
+identical result rows, and the ledger token columns must not move; the
+saving shows up solely in `prefill_tokens` (strictly lower) and in the
+separately-reported `saved_prefill_tokens`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.ledger import CostLedger
+from repro.core.scheduler import BatchScheduler
+from repro.data import lm_data
+from repro.data.corpus import make_swde_corpus
+from repro.extract.served import ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.models import init_decode_cache, init_params
+from repro.models.cache_ops import (cache_nbytes, expand_snapshot,
+                                    prefix_snapshot, slot_cache, write_slot)
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.prefix_cache import PrefixCache
+
+
+# ------------------------------------------------------------ store unit ---
+
+
+def test_prefix_store_longest_proper_prefix():
+    pc = PrefixCache(max_entries=8)
+    pc.insert([1, 2], {"pos": jnp.int32(2)})
+    pc.insert([1, 2, 3, 4], {"pos": jnp.int32(4)})
+    hit = pc.match([1, 2, 3, 4, 9, 9])
+    assert hit is not None and hit.tokens == (1, 2, 3, 4)
+    # an entry equal to the whole prompt is NOT a hit (proper prefix only:
+    # at least one suffix token must be prefilled to produce logits)
+    hit = pc.match([1, 2, 3, 4])
+    assert hit is not None and hit.tokens == (1, 2)
+    assert pc.match([5, 6, 7]) is None
+    assert pc.stats.hits == 2 and pc.stats.misses == 1
+
+
+def test_prefix_store_lru_eviction():
+    pc = PrefixCache(max_entries=2)
+    pc.insert([1], {"pos": jnp.int32(1)})
+    pc.insert([2], {"pos": jnp.int32(1)})
+    assert pc.match([1, 9]) is not None          # touch [1] -> [2] is LRU
+    pc.insert([3], {"pos": jnp.int32(1)})
+    assert len(pc) == 2 and pc.stats.evictions == 1
+    assert pc.match([2, 9]) is None              # [2] was evicted
+    assert pc.match([1, 9]) is not None
+
+
+def test_prefix_store_byte_budget():
+    big = {"k": jnp.zeros((2, 1, 16, 4), jnp.float32)}
+    pc = PrefixCache(max_entries=64, max_bytes=int(1.5 * cache_nbytes(big)))
+    pc.insert([1], dict(big))
+    pc.insert([2], dict(big))
+    assert len(pc) == 1 and pc.nbytes <= pc.max_bytes
+
+
+# ------------------------------------------------------- cache_ops unit ----
+
+
+def test_cache_ops_slot_and_snapshot_roundtrip():
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    cache = init_decode_cache(cfg, 3, 16)
+    cache["pos"] = jnp.zeros((3,), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    filled = {k: (jax.random.normal(key, v.shape, v.dtype)
+                  if jnp.issubdtype(v.dtype, jnp.floating) else v)
+              for k, v in cache.items()}
+    filled["pos"] = jnp.asarray([3, 7, 5], jnp.int32)
+    sub = slot_cache(filled, 1)
+    assert int(sub["pos"]) == 7
+    back = write_slot(filled, sub, 1)
+    for k in filled:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(filled[k]))
+    # snapshot trims the token axis to the prefix; expand zero-pads it back
+    snap = prefix_snapshot(sub, 5)
+    assert snap["k"].shape[2] == 5 and int(snap["pos"]) == 5
+    assert cache_nbytes(snap) < cache_nbytes(sub)
+    full = expand_snapshot(snap, 16)
+    assert full["k"].shape == sub["k"].shape
+    np.testing.assert_array_equal(np.asarray(full["k"][:, :, :5]),
+                                  np.asarray(sub["k"][:, :, :5]))
+    assert not np.asarray(full["k"][:, :, 5:]).any()
+
+
+# ------------------------------------------------------ engine semantics ---
+
+
+def _engine_outputs(cfg, params, prompts, shared_len, *, prefix_cache,
+                    max_new=5):
+    eng = ServingEngine(cfg, params, slots=2, max_len=64,
+                        prefix_cache=prefix_cache, prefix_min_len=4)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=max_new, eos_id=-1,
+                           shared_len=shared_len))
+    done = eng.run()
+    return eng, {i: done[i].out for i in range(len(prompts))}
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "falcon-mamba-7b"])
+def test_engine_prefix_cache_identical_outputs(arch):
+    """Decoded outputs are byte-identical with the cache on or off, for an
+    attention family and an SSM family (recurrent state at the prefix
+    boundary must be exact, not just position-indexed KV)."""
+    cfg = get_smoke_config(arch).replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shared = [7, 3, 9, 4, 2, 8, 1, 6, 5, 7, 3, 2]
+    prompts = [shared + [10 + i, 20 + i, 30 + i] for i in range(4)]
+    eng_off, off = _engine_outputs(cfg, params, prompts, len(shared),
+                                   prefix_cache=False)
+    eng_on, on = _engine_outputs(cfg, params, prompts, len(shared),
+                                 prefix_cache=True)
+    assert on == off
+    # strictly fewer prefill tokens, savings reported separately
+    assert eng_on.stats["prefill_tokens"] < eng_off.stats["prefill_tokens"]
+    assert eng_on.stats["prefix_hits"] == 3
+    assert eng_on.stats["prefix_saved_tokens"] == 3 * len(shared)
+    assert eng_off.stats["prefix_hits"] == 0
+    # accounting identity: prefilled + saved == the cache-off prefill total
+    assert (eng_on.stats["prefill_tokens"] +
+            eng_on.stats["prefix_saved_tokens"]) == \
+        eng_off.stats["prefill_tokens"]
+
+
+def test_engine_accepts_configured_prefix_cache_instance():
+    """A user-supplied (initially empty, hence falsy) PrefixCache must be
+    used, not silently discarded."""
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pc = PrefixCache(max_entries=4)
+    shared = [7, 3, 9, 4, 2, 8, 1, 6]
+    prompts = [shared + [10 + i, 20 + i] for i in range(3)]
+    eng, _ = _engine_outputs(cfg, params, prompts, len(shared),
+                             prefix_cache=pc)
+    assert eng.prefix_cache is pc
+    assert pc.stats.hits == 2 and len(pc) == 1
+
+
+def test_engine_prefix_cache_no_boundary_is_noop():
+    """Requests without a shared_len annotation never snapshot or hit."""
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8, 9, i] for i in range(3)]
+    eng, _ = _engine_outputs(cfg, params, prompts, 0, prefix_cache=True)
+    assert eng.stats["prefix_hits"] == 0
+    assert eng.stats["prefix_inserts"] == 0
+    assert len(eng.prefix_cache) == 0
+
+
+# ------------------------------------------------- extractor + scheduler ---
+
+
+def _served_run(corpus, retr, items, *, prefix_cache):
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=4, max_len=1024,
+                        prefix_cache=prefix_cache)
+    extractor = ServedExtractor(corpus, eng, max_new=6)
+    ledger = CostLedger()
+    sched = BatchScheduler(retr, extractor, ledger, {}, batch_size=8)
+    out = sched.extract_many(items)
+    return eng, extractor, ledger, out
+
+
+def test_served_prefix_cache_rows_and_ledger_invariant():
+    """End-to-end through scheduler + served extractor: identical result
+    rows and ledger token columns; prefill strictly lower; savings threaded
+    into ServedStats and CostLedger."""
+    corpus = make_swde_corpus()
+    retr = TwoLevelRetriever(corpus, mode="rag_topk")
+    docs = sorted(corpus.tables["universities"])[:5]
+    items = [(d, a, "universities") for d in docs
+             for a in ("tuition", "enrollment")]
+
+    eng_off, ex_off, led_off, out_off = _served_run(
+        corpus, retr, items, prefix_cache=False)
+    eng_on, ex_on, led_on, out_on = _served_run(
+        corpus, retr, items, prefix_cache=True)
+
+    assert out_on == out_off                       # byte-identical rows
+    assert led_on.input_tokens == led_off.input_tokens
+    assert led_on.output_tokens == led_off.output_tokens
+    assert led_on.per_phase == led_off.per_phase
+    assert eng_on.stats["prefill_tokens"] < eng_off.stats["prefill_tokens"]
+    assert ex_on.stats.prefix_hits > 0
+    assert ex_on.stats.saved_prefill_tokens > 0
+    assert led_on.prefix_hits == ex_on.stats.prefix_hits
+    assert led_on.saved_prefill_tokens == ex_on.stats.saved_prefill_tokens
+    assert led_off.saved_prefill_tokens == 0
+
+
+def test_scheduler_groups_by_shared_prefix():
+    """Interleaved (attr, table) needs are stable-grouped so same-prefix
+    requests land in the same chunk."""
+    keys = [("d1", "a", "t"), ("d1", "b", "t"), ("d2", "a", "t"),
+            ("d2", "b", "t"), ("d3", "a", "t")]
+    grouped = BatchScheduler._group_by_prefix(keys)
+    assert grouped == [("d1", "a", "t"), ("d2", "a", "t"), ("d3", "a", "t"),
+                       ("d1", "b", "t"), ("d2", "b", "t")]

@@ -15,7 +15,7 @@ from repro.data import lm_data
 from repro.data.corpus import make_swde_corpus
 from repro.distributed.straggler import run_with_stragglers
 from repro.models import decode_step, forward, init_params, prefill
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, RunTruncated, ServingEngine
 from repro.training.checkpoint import (latest_step, restore_checkpoint,
                                        save_checkpoint)
 from repro.training.driver import CrashInjected, Trainer, TrainerConfig
@@ -69,6 +69,47 @@ def test_engine_eviction_requeues(tiny):
     done = eng.run()
     assert done[0].retries == 1
     assert done[0].out == _reference_generate(cfg, params, [1, 2, 3], 5)
+
+
+def test_engine_run_truncation_is_loud(tiny):
+    """Exhausting max_steps with work still pending must not read as a
+    complete run: strict mode raises, non-strict flags it in stats."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, slots=1, max_len=32)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new=8, eos_id=-1))
+    with pytest.raises(RunTruncated) as exc:
+        eng.run(max_steps=2)
+    assert eng.stats["truncations"] == 1
+    assert len(exc.value.finished) < 3
+    # non-strict callers get partial results plus the flag
+    eng2 = ServingEngine(cfg, params, slots=1, max_len=32)
+    for i in range(3):
+        eng2.submit(Request(rid=i, prompt=[1, 2, 3], max_new=8, eos_id=-1))
+    done = eng2.run(max_steps=2, strict=False)
+    assert eng2.stats["truncations"] == 1 and len(done) < 3
+    # the same engine can finish the drain afterwards
+    assert len(eng2.run()) == 3
+
+
+def test_engine_drain_slot_retry_cap(tiny):
+    """A persistently failing slot must not requeue forever: past
+    max_retries the request fails visibly instead."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, slots=1, max_len=32)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=5, eos_id=-1,
+                       max_retries=2))
+    for _ in range(10):                      # persistent slot failure
+        if eng.queue:
+            eng._insert(0, eng.queue.popleft())
+        if not eng.active:
+            break
+        eng.drain_slot(0)
+    assert 0 in eng.failed and eng.failed[0].error is not None
+    assert eng.failed[0].retries == 3        # initial + 2 retries, then fail
+    assert eng.stats["failures"] == 1
+    assert not eng.queue and not eng.active  # run() would terminate
+    assert eng.run() == {}
 
 
 # ---------------------------------------------------------- checkpoints ----
