@@ -96,15 +96,15 @@ def result_join_rows(res):
 
 
 class OracleStatsEngine(Engine):
-    """`Optimal` baseline: the engine but with ground-truth selectivities."""
+    """`Optimal` baseline: the engine but with ground-truth selectivities
+    (wired in through the session's table-context hook)."""
 
     def __init__(self, *args, corpus=None, **kw):
         super().__init__(*args, **kw)
         self._corpus = corpus
 
-    def _prepare_table(self, query, table):
-        ctx = super()._prepare_table(query, table)
-        truth = self._corpus.truth_rows(table)
+    def _wrap_table_context(self, ctx, query):
+        truth = self._corpus.truth_rows(ctx.name)
 
         class TruthStats:
             def __init__(s, inner):

@@ -1,0 +1,206 @@
+"""Cross-query multiplexing through one Session vs. serial sessions
+(DESIGN.md §11).
+
+Workload: two analytics queries on the same table (the second query's
+attributes covered by the first's), run through the real serving engine
+three ways:
+
+  serial-sessions   two independent Sessions over two fresh engines —
+                    each query pays its own sampling phase and warms its
+                    own prefix cache (the pre-session cost model);
+  shared-serial     one Session, queries submitted back to back — the
+                    second query reuses the first's sampling investment;
+  shared-concurrent one Session, both queries in flight at once — their
+                    document coroutines feed the same scheduler rounds,
+                    so extractions from different queries batch into the
+                    same `engine.run()` calls and share prefix groups.
+
+Checks (acceptance criteria of the session layer):
+  * shared-concurrent rows are identical per query to shared-serial rows;
+  * the second query's sampling-phase token column is 0 via stats reuse;
+  * the shared engine needs fewer total `engine.run()` rounds and gets a
+    higher prefix-cache hit *rate* than the two serial sessions combined.
+
+Emits `benchmarks/out/BENCH_multi_query.json` (uploaded as a CI artifact
+per run) plus a CSV of the three paths. `--smoke` runs the reduced
+CI-sized workload.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import Filter, Query, Session, conj
+from repro.data import lm_data
+from repro.data.corpus import Corpus, make_swde_corpus
+from repro.extract.served import ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+
+OUT = Path(__file__).parent / "out"
+
+
+def _corpus(small: bool) -> Corpus:
+    full = make_swde_corpus()
+    if not small:
+        return full
+    n = 10
+    uni = [d for d in sorted(full.docs) if "universities" in d][:n]
+    lap = [d for d in sorted(full.docs) if "laptops" in d][:n]
+    return full.subset(uni + lap)
+
+
+def _queries():
+    q1 = Query(tables=["universities"],
+               select=[("universities", "university_name")],
+               where=conj(Filter("tuition", "<", 30000, table="universities"),
+                          Filter("enrollment", ">", 20000,
+                                 table="universities")))
+    # attrs ⊆ q1's sampled set -> eligible for sampling reuse
+    q2 = Query(tables=["universities"],
+               select=[("universities", "university_name")],
+               where=Filter("enrollment", ">", 30000, table="universities"))
+    return q1, q2
+
+
+def _fresh_session(corpus, cfg, params, batch):
+    engine = ServingEngine(cfg, params, slots=batch, max_len=1024,
+                           prefix_cache=True)
+    extractor = ServedExtractor(corpus, engine, max_new=6)
+    sess = Session(TwoLevelRetriever(corpus), extractor, batch_size=batch)
+    return sess, engine
+
+
+def _row_keys(res):
+    return sorted(tuple(sorted(r["_docs"].items())) for r in res.rows)
+
+
+def run(quick: bool = False, smoke: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = quick or smoke
+    corpus = _corpus(small)
+    batch = 4 if small else 8
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    q1, q2 = _queries()
+
+    # --- serial sessions: two engines, two sampling phases ----------------
+    t0 = time.time()
+    sess_a, eng_a = _fresh_session(corpus, cfg, params, batch)
+    r1_serial = sess_a.execute(q1)
+    sess_b, eng_b = _fresh_session(corpus, cfg, params, batch)
+    r2_serial = sess_b.execute(q2)
+    wall_serial = time.time() - t0
+    serial_runs = eng_a.stats["runs"] + eng_b.stats["runs"]
+    serial_reqs = sess_a.extractor.stats.requests + \
+        sess_b.extractor.stats.requests
+    serial_hits = eng_a.stats["prefix_hits"] + eng_b.stats["prefix_hits"]
+    serial_prefill = eng_a.stats["prefill_tokens"] + eng_b.stats["prefill_tokens"]
+
+    # --- shared session, serial submits (row-identity reference) ----------
+    sess_ref, _eng_ref = _fresh_session(corpus, cfg, params, batch)
+    ref1 = sess_ref.execute(q1)
+    ref2 = sess_ref.execute(q2)
+
+    # --- shared session, concurrent submits -------------------------------
+    t0 = time.time()
+    sess_m, eng_m = _fresh_session(corpus, cfg, params, batch)
+    h1 = sess_m.submit(sess_m.prepare(q1))
+    h2 = sess_m.submit(sess_m.prepare(q2))
+    sess_m.drain()
+    r1_multi, r2_multi = h1.result(), h2.result()
+    wall_multi = time.time() - t0
+    multi_runs = eng_m.stats["runs"]
+    multi_reqs = sess_m.extractor.stats.requests
+    multi_hits = eng_m.stats["prefix_hits"]
+    multi_prefill = eng_m.stats["prefill_tokens"]
+
+    rows_identical = (_row_keys(r1_multi) == _row_keys(ref1)
+                      and _row_keys(r2_multi) == _row_keys(ref2))
+    q2_sampling_multi = r2_multi.ledger.per_phase.get("sampling", 0)
+    q2_sampling_serial = r2_serial.ledger.per_phase.get("sampling", 0)
+    # prefix *misses* (cold template prefills) are the sharing metric: the
+    # shared session warms each (attr, table) template once across BOTH
+    # queries, where serial sessions each re-warm their own prefix cache.
+    # (Raw hit counts can only fall when sampling reuse removes the very
+    # requests that would have hit.)
+    serial_misses = serial_reqs - serial_hits
+    multi_misses = multi_reqs - multi_hits
+
+    result = {
+        "bench": "multi_query", "smoke": bool(small), "batch": batch,
+        "docs": len(corpus.docs),
+        "rows_q1": len(r1_multi.rows), "rows_q2": len(r2_multi.rows),
+        "rows_identical_to_serial_session": rows_identical,
+        "q2_sampling_tokens_serial_sessions": q2_sampling_serial,
+        "q2_sampling_tokens_shared": q2_sampling_multi,
+        "q2_sampling_reused": r2_multi.meta["sampling_reused"],
+        "engine_runs_serial_sessions": serial_runs,
+        "engine_runs_shared": multi_runs,
+        "prefix_hits_serial_sessions": serial_hits,
+        "prefix_hits_shared": multi_hits,
+        "prefix_misses_serial_sessions": serial_misses,
+        "prefix_misses_shared": multi_misses,
+        "prefill_tokens_serial_sessions": serial_prefill,
+        "prefill_tokens_shared": multi_prefill,
+        "requests_serial_sessions": serial_reqs,
+        "requests_shared": multi_reqs,
+        "total_tokens_serial_sessions":
+            r1_serial.ledger.total_tokens + r2_serial.ledger.total_tokens,
+        "total_tokens_shared": sess_m.ledger.total_tokens,
+        "wall_serial_s": round(wall_serial, 3),
+        "wall_shared_s": round(wall_multi, 3),
+    }
+    with open(OUT / "BENCH_multi_query.json", "w") as f:
+        json.dump(result, f, indent=2)
+    with open(OUT / "multi_query.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["path", "engine_runs", "requests", "prefix_hits",
+                    "prefix_misses", "prefill_tokens", "q2_sampling_tokens",
+                    "total_tokens", "wall_s"])
+        w.writerow(["serial-sessions", serial_runs, serial_reqs, serial_hits,
+                    serial_misses, serial_prefill, q2_sampling_serial,
+                    result["total_tokens_serial_sessions"],
+                    f"{wall_serial:.3f}"])
+        w.writerow(["shared-concurrent", multi_runs, multi_reqs, multi_hits,
+                    multi_misses, multi_prefill, q2_sampling_multi,
+                    result["total_tokens_shared"], f"{wall_multi:.3f}"])
+
+    print(f"multi_query: runs {serial_runs} -> {multi_runs} | "
+          f"q2 sampling tokens {q2_sampling_serial} -> {q2_sampling_multi} | "
+          f"prefix misses {serial_misses} -> {multi_misses} | "
+          f"prefill tokens {serial_prefill} -> {multi_prefill} | "
+          f"rows identical: {rows_identical} | "
+          f"wall {wall_serial:.1f}s -> {wall_multi:.1f}s")
+
+    assert rows_identical, "concurrent execution changed result rows"
+    assert q2_sampling_multi == 0, (
+        "second query paid a sampling phase despite covered attrs")
+    assert q2_sampling_serial > 0, (
+        "serial-sessions baseline unexpectedly skipped sampling")
+    assert multi_runs < serial_runs, (
+        f"shared session used {multi_runs} engine runs vs {serial_runs} "
+        f"serial — multiplexing should merge rounds")
+    assert multi_misses < serial_misses, (
+        f"cross-query prefix sharing did not reduce cold prefills: "
+        f"{multi_misses} misses vs {serial_misses} serial")
+    assert multi_prefill < serial_prefill, (
+        f"shared session prefilled more tokens ({multi_prefill}) than the "
+        f"serial sessions ({serial_prefill})")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

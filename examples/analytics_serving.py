@@ -4,6 +4,12 @@ decode with KV caches) — the paper's LLM substrate, not a mock.
 
     PYTHONPATH=src python examples/analytics_serving.py [--arch qwen2.5-3b]
 
+Two analytics queries run *concurrently* through one Session multiplexed
+over one serving engine: their document coroutines feed the same
+continuous-batching rounds (shared `engine.run()` calls, shared prefix-KV
+groups) and the second query reuses the first's sampling investment, so
+its sampling token column is zero.
+
 Uses the arch's reduced (smoke) config so it runs on CPU; on TPU pass
 --full to serve the full config on the production mesh.
 """
@@ -13,7 +19,7 @@ import time
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import Engine, Filter, Query, conj
+from repro.core import Filter, Query, Session, conj
 from repro.data import lm_data
 from repro.data.corpus import make_swde_corpus
 from repro.extract.served import ServedExtractor
@@ -45,26 +51,41 @@ def main():
     retriever = TwoLevelRetriever(corpus)
     extractor = ServedExtractor(corpus, engine)
     batch = args.batch_size if args.batch_size is not None else args.slots
-    quest = Engine(retriever, extractor, sample_rate=0.03, batch_size=batch)
+    session = Session(retriever, extractor, sample_rate=0.03,
+                      batch_size=batch)
 
-    query = Query(
+    q1 = Query(
         tables=["universities"],
         select=[("universities", "university_name")],
         where=conj(Filter("tuition", "<", 20000, table="universities"),
                    Filter("enrollment", ">", 30000, table="universities")),
     )
-    print("query:", query)
-    t0 = time.time()
-    result = quest.execute(query)
-    dt = time.time() - t0
+    q2 = Query(
+        tables=["universities"],
+        select=[("universities", "university_name")],
+        where=Filter("enrollment", ">", 45000, table="universities"),
+    )
+    p1, p2 = session.prepare(q1), session.prepare(q2)
+    for p in (p1, p2):
+        print("\n" + p.explain_text())
 
-    print(f"\n{len(result.rows)} rows in {dt:.1f}s:")
-    for r in result.rows[:10]:
-        print("  ", r["universities.university_name"])
-    print("\nQUEST ledger:", result.ledger.snapshot())
+    t0 = time.time()
+    h1, h2 = p1.submit(), p2.submit()     # both in flight, shared rounds
+    session.drain()
+    dt = time.time() - t0
+    r1, r2 = h1.result(), h2.result()
+
+    for name, r in (("q1", r1), ("q2", r2)):
+        print(f"\n{name}: {len(r.rows)} rows "
+              f"(sampling tokens {r.ledger.per_phase.get('sampling', 0)}, "
+              f"reused: {r.meta['sampling_reused']['universities']})")
+        for row in r.rows[:10]:
+            print("  ", row["universities.university_name"])
+    print(f"\nboth queries in {dt:.1f}s over one engine")
+    print("session ledger:", session.ledger.snapshot())
     print("serving engine stats:", engine.stats)
     print("served extractor:", extractor.stats)
-    print("batch scheduler:", quest.scheduler.stats.snapshot())
+    print("batch scheduler:", session.scheduler.stats.snapshot())
 
 
 if __name__ == "__main__":

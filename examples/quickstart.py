@@ -1,8 +1,14 @@
-"""Quickstart: QUEST over a synthetic corpus in ~30 lines.
+"""Quickstart: QUEST over a synthetic corpus through the Session API.
 
     PYTHONPATH=src python examples/quickstart.py
+
+A Session owns the cross-query state (attribute-value cache, per-table
+sampling statistics, cost ledger): `prepare` validates and explains a
+query before anything is paid, `submit` returns a handle whose `rows()`
+streams results as documents clear projection, and a second query on the
+same table reuses the first's sampling investment.
 """
-from repro.core import Engine, Filter, Query, conj
+from repro.core import Filter, Query, Session, conj
 from repro.data.corpus import make_wiki_corpus
 from repro.extract import OracleExtractor
 from repro.index.retriever import TwoLevelRetriever
@@ -14,9 +20,10 @@ def main():
           f"{len(corpus.attr_specs)} logical tables")
 
     retriever = TwoLevelRetriever(corpus)          # builds the two-level index
-    # batch_size batches extractions across documents (same rows and token
-    # cost as batch_size=1; wall-clock win with the real serving extractor)
-    engine = Engine(retriever, OracleExtractor(corpus), batch_size=8)
+    # batch_size batches extractions across documents — and across queries
+    # (same rows and token cost as batch_size=1; wall-clock win with the
+    # real serving extractor)
+    session = Session(retriever, OracleExtractor(corpus), batch_size=8)
 
     query = Query(
         tables=["players"],
@@ -24,16 +31,29 @@ def main():
         where=conj(Filter("age", ">", 35, table="players"),
                    Filter("all_stars", ">", 12, table="players")),
     )
-    print("query:", query)
+    prepared = session.prepare(query)     # unknown table/op/attr fails HERE
+    print("plan before paying anything:")
+    print(prepared.explain_text())
 
-    result = engine.execute(query)
-    print(f"\n{len(result.rows)} rows:")
-    for r in result.rows:
-        print("  ", r["players.player_name"])
-    print("\nLLM cost:", result.ledger.snapshot())
+    handle = prepared.submit()
+    print("\nrows (streamed as documents clear projection):")
+    for row in handle.rows():
+        print("  ", row["players.player_name"])
+    result = handle.result()
+    print("\nLLM cost (this query only):", result.ledger.snapshot())
     print("\nexample per-document plans (instance-optimized):")
     for (table, doc), plan in list(result.plans_sampled.items())[:3]:
         print(f"  {doc}: {plan}")
+
+    # a second query on the same table: sampling already paid -> reused
+    q2 = Query(tables=["players"], select=[("players", "player_name")],
+               where=Filter("age", ">", 38, table="players"))
+    print("\nsecond query:", q2)
+    print(session.prepare(q2).explain_text())
+    r2 = session.execute(q2)
+    print(f"rows: {len(r2.rows)} | sampling tokens this query: "
+          f"{r2.ledger.per_phase.get('sampling', 0)} (reused: "
+          f"{r2.meta['sampling_reused']['players']})")
 
 
 if __name__ == "__main__":

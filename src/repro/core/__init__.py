@@ -1,11 +1,15 @@
-from .expr import And, Filter, JoinEdge, Or, Query, conj, disj
-from .executor import Engine, QueryResult
+from .expr import (And, Filter, JoinEdge, Or, Query, QueryError, conj, disj)
+from .executor import Engine, QueryResult, QueryRun, TableSample
 from .ledger import CostLedger
 from .ordering import exhaustive_plan, plan_expression, plan_fixed_order
 from .scheduler import BatchScheduler, SchedulerStats
+from .session import PreparedQuery, QueryHandle, Session, render_explain
 from .stats import SampleStats
 
-__all__ = ["Filter", "And", "Or", "Query", "JoinEdge", "conj", "disj",
-           "Engine", "QueryResult", "CostLedger", "SampleStats",
+__all__ = ["Filter", "And", "Or", "Query", "JoinEdge", "QueryError",
+           "conj", "disj",
+           "Engine", "QueryResult", "QueryRun", "TableSample",
+           "Session", "PreparedQuery", "QueryHandle", "render_explain",
+           "CostLedger", "SampleStats",
            "BatchScheduler", "SchedulerStats",
            "plan_expression", "plan_fixed_order", "exhaustive_plan"]

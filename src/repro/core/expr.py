@@ -10,6 +10,16 @@ from dataclasses import dataclass, field
 from typing import Any, Iterator, Optional, Sequence, Union
 
 
+class QueryError(ValueError):
+    """Malformed query: unknown operator, or a SELECT/WHERE/join reference
+    to a table the query does not declare. Raised at construction (and by
+    `Session.prepare`, which adds corpus-level checks) — never from deep
+    inside plan evaluation mid-extraction."""
+
+
+VALID_OPS = ("=", "!=", ">", ">=", "<", "<=", "between", "in", "contains")
+
+
 @dataclass(frozen=True)
 class Filter:
     attr: str
@@ -17,6 +27,12 @@ class Filter:
     value: Any = None
     value2: Any = None           # upper bound for 'between'
     table: str = ""              # owning table (join queries)
+
+    def __post_init__(self):
+        if self.op not in VALID_OPS:
+            raise QueryError(
+                f"unknown op {self.op!r} for filter on {self.attr!r} "
+                f"(valid: {', '.join(VALID_OPS)})")
 
     def evaluate(self, v) -> bool:
         if v is None:
@@ -147,6 +163,33 @@ class Query:
     select: Sequence[tuple]             # [(table, attr)]
     where: Optional[Expr] = None
     joins: Sequence[JoinEdge] = field(default_factory=tuple)
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Structural validation: every SELECT / tagged-WHERE / join
+        reference must name a table the query declares. Corpus-level checks
+        (table exists, attribute known) live in `Session.prepare`."""
+        if not self.tables:
+            raise QueryError("query declares no tables")
+        declared = set(self.tables)
+        for t, a in self.select:
+            if t not in declared:
+                raise QueryError(
+                    f"SELECT {t}.{a} references table {t!r} absent from "
+                    f"query.tables {sorted(declared)}")
+        for f in iter_filters(self.where):
+            if f.table and f.table not in declared:
+                raise QueryError(
+                    f"WHERE filter {f} references table {f.table!r} absent "
+                    f"from query.tables {sorted(declared)}")
+        for j in self.joins:
+            for t in (j.left_table, j.right_table):
+                if t not in declared:
+                    raise QueryError(
+                        f"join {j} references table {t!r} absent from "
+                        f"query.tables {sorted(declared)}")
 
     def select_attrs(self, table: str) -> list[str]:
         return [a for t, a in self.select if t == table]

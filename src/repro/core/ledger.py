@@ -3,10 +3,20 @@
 Every extraction charges input tokens (prompt overhead + relevant-segment
 tokens) and output tokens. The ledger is threaded through extractors so
 benchmarks report exactly what Table 3 of the paper reports.
+
+Sessions (DESIGN.md §11) use a two-level ledger: the session-wide parent
+plus one `child()` per query. Token charges made against a child forward
+to its parent, so the session ledger always equals the sum of its queries
+(plus any direct charges), while each `QueryResult` carries only its own
+query's columns — per-query accounting never double-counts across
+`execute()` calls. Batch/prefix counters and wall time are recorded where
+they happen (shared rounds on the parent, per-query participation on the
+child) and do not forward.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 @dataclass
@@ -27,6 +37,12 @@ class CostLedger:
     # token columns stay cache-invariant and the saving is reported apart
     prefix_hits: int = 0
     saved_prefill_tokens: int = 0
+    # parent session ledger (child() creates the link); charges forward up
+    parent: Optional["CostLedger"] = None
+
+    def child(self) -> "CostLedger":
+        """Per-query child: its token charges also land on this ledger."""
+        return CostLedger(parent=self)
 
     def charge(self, *, inp: int, out: int = 0, calls: int = 1, phase: str = "query"):
         self.input_tokens += inp
@@ -34,6 +50,8 @@ class CostLedger:
         self.llm_calls += calls
         self.extractions += 1
         self.per_phase[phase] = self.per_phase.get(phase, 0) + inp + out
+        if self.parent is not None:
+            self.parent.charge(inp=inp, out=out, calls=calls, phase=phase)
 
     def record_batch(self, n: int):
         self.batches += 1

@@ -23,6 +23,13 @@ once per group instead of once per document. Grouping only reorders
 independent needs within a round, so result rows and ledger token totals
 stay identical.
 
+Under a `core.session.Session` (DESIGN.md §11) a round's needs may come
+from several concurrent queries: `resolve_round` accepts the merged,
+deduplicated needs of all in-flight queries with an `owners` map routing
+each charge to the owning query's child ledger, so cross-query needs
+share the same extract_batch rounds and (attr, table) prefix groups while
+per-query token accounting stays exact.
+
 Knobs: `batch_size` (max extractions per extract_batch round; 1 = the
 serial per-extraction path), `queue_depth` (max in-flight documents).
 """
@@ -46,6 +53,43 @@ class SchedulerStats:
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
+
+
+class RunQueue:
+    """In-flight document coroutines under queue_depth admission control —
+    the drive loop shared by `BatchScheduler.run` (single query) and the
+    session multiplexer's run barriers (DESIGN.md §11).
+
+    `collect()` returns one round's needs (one per still-blocked
+    coroutine). When an entire admitted wave completes without yielding a
+    need — e.g. every value was already in the session cache — the next
+    wave is admitted and advanced immediately, so a round never comes back
+    empty while work remains (returning empty-handed there would read as a
+    stall to the caller)."""
+
+    def __init__(self, coroutines: dict, queue_depth: int):
+        self.pending = deque(coroutines.items())
+        self.live: list = []
+        self.results: dict = {}
+        self.queue_depth = max(1, int(queue_depth))
+
+    def collect(self, scheduler: "BatchScheduler") -> list:
+        while True:
+            while self.pending and len(self.live) < self.queue_depth:
+                self.live.append(self.pending.popleft())
+            needs, blocked = [], []
+            for key, gen in self.live:
+                need = scheduler._advance(key, gen, self.results)
+                if need is not None:
+                    needs.append(need)
+                    blocked.append((key, gen))
+            self.live = blocked
+            if needs or self.done:
+                return needs
+
+    @property
+    def done(self) -> bool:
+        return not self.live and not self.pending
 
 
 class BatchScheduler:
@@ -76,24 +120,17 @@ class BatchScheduler:
         pending extraction per blocked coroutine, resolves the deduplicated
         set in `batch_size` chunks, then resumes everyone.
         """
-        results: dict = {}
-        pending = deque(coroutines.items())
-        live: list = []
-        while pending or live:
-            while pending and len(live) < self.queue_depth:
-                live.append(pending.popleft())
+        queue = RunQueue(coroutines, self.queue_depth)
+        while True:
+            raw = queue.collect(self)
+            if queue.done:
+                return queue.results
             needs: dict = {}            # ordered de-dup of this round's keys
-            blocked = []
-            for key, gen in live:
-                need = self._advance(key, gen, results)
-                if need is not None:
-                    if need in needs:
-                        self.stats.dedup_hits += 1
-                    needs[need] = None
-                    blocked.append((key, gen))
+            for need in raw:
+                if need in needs:
+                    self.stats.dedup_hits += 1
+                needs[need] = None
             self._resolve(list(needs), phase=phase)
-            live = blocked
-        return results
 
     def _advance(self, key, gen, results):
         """Advance one coroutine until it blocks on an uncached extraction
@@ -128,10 +165,22 @@ class BatchScheduler:
         self._resolve(todo, phase=phase)
         return {(d, a): self.cache.get((d, a)) for d, a, _ in keys}
 
-    def _resolve(self, keys: list, *, phase: str) -> None:
+    def resolve_round(self, needs: list, *, owners: dict = None,
+                      phase: str = "query") -> None:
+        """Resolve one multiplexed round of already-deduplicated needs —
+        possibly spanning several concurrent queries (DESIGN.md §11).
+        `owners` maps (doc_id, attr) -> the owning query's child ledger;
+        unmapped needs charge the session ledger. Prefix grouping and
+        chunking treat the merged round as one stream, so same-attribute
+        needs from *different* queries share extract_batch rounds and
+        prefix-cache groups."""
+        self._resolve(needs, phase=phase, owners=owners)
+
+    def _resolve(self, keys: list, *, phase: str, owners: dict = None) -> None:
         keys = self._group_by_prefix(keys)
         for i in range(0, len(keys), self.batch_size):
-            self._extract_chunk(keys[i:i + self.batch_size], phase=phase)
+            self._extract_chunk(keys[i:i + self.batch_size], phase=phase,
+                                owners=owners)
 
     @staticmethod
     def _group_by_prefix(keys: list) -> list:
@@ -143,7 +192,8 @@ class BatchScheduler:
             order.setdefault((attr, table), len(order))
         return sorted(keys, key=lambda k: order[(k[1], k[2])])
 
-    def _extract_chunk(self, chunk: list, *, phase: str) -> None:
+    def _extract_chunk(self, chunk: list, *, phase: str,
+                       owners: dict = None) -> None:
         prefetch = getattr(self.retriever, "prefetch_segments", None)
         if prefetch is not None and len(chunk) > 1:
             prefetch(chunk)
@@ -167,10 +217,26 @@ class BatchScheduler:
         self.stats.max_batch = max(self.stats.max_batch, len(items))
         self.ledger.record_batch(len(items))
         self.ledger.record_prefix(hits1 - hits0, saved1 - saved0)
+        if owners:
+            self.record_owner_batches(owners.get(k) for k in slots)
         for (doc_id, attr), (value, inp_tokens) in zip(slots, out):
-            self.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
-                               out=OUTPUT_TOKENS, phase=phase)
+            ledger = (owners or {}).get((doc_id, attr)) or self.ledger
+            ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
+                          out=OUTPUT_TOKENS, phase=phase)
             self.cache[(doc_id, attr)] = value
+
+    def record_owner_batches(self, ledgers) -> None:
+        """Per-query batch participation for one shared chunk: each child
+        ledger appearing in `ledgers` (one entry per chunk item; None or the
+        session ledger itself are skipped) records one batch of its own item
+        count — the session ledger records the shared round itself."""
+        per: dict = {}
+        for led in ledgers:
+            if led is not None and led is not self.ledger:
+                ent = per.setdefault(id(led), [led, 0])
+                ent[1] += 1
+        for led, n in per.values():
+            led.record_batch(n)
 
     # -------------------------------------------------- sampling phase -----
 
@@ -179,17 +245,26 @@ class BatchScheduler:
         Returns {doc_id: (values, segments_by_attr, input_tokens)} in the
         given order; the served path submits each chunk as one
         continuous-batching round."""
-        out: dict = {}
-        for i in range(0, len(doc_ids), self.batch_size):
-            chunk = doc_ids[i:i + self.batch_size]
+        res = self.extract_full_doc_items([(d, attrs) for d in doc_ids])
+        return dict(zip(doc_ids, res))
+
+    def extract_full_doc_items(self, items: list, owners: list = None) -> list:
+        """Sampling rounds over `items = [(doc_id, attrs)]`, which may span
+        several concurrent queries' sampling phases (DESIGN.md §11) — the
+        chunks are shared continuous-batching rounds. `owners` (parallel to
+        `items`, entries may be None) carries each item's child ledger for
+        per-query batch counters. Returns results parallel to `items`."""
+        out: list = []
+        for i in range(0, len(items), self.batch_size):
+            chunk = items[i:i + self.batch_size]
             hits0, saved0 = self._prefix_stats()
-            res = self.extractor.extract_full_doc_batch(
-                [(d, attrs) for d in chunk])
+            res = self.extractor.extract_full_doc_batch(chunk)
             hits1, saved1 = self._prefix_stats()
             self.ledger.record_batch(len(chunk))
             self.ledger.record_prefix(hits1 - hits0, saved1 - saved0)
-            for d, r in zip(chunk, res):
-                out[d] = r
+            if owners:
+                self.record_owner_batches(owners[i:i + self.batch_size])
+            out.extend(res)
         return out
 
     def _prefix_stats(self):

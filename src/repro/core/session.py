@@ -1,0 +1,617 @@
+"""Session layer: query lifecycle and concurrent multi-query execution
+multiplexed over one serving engine (DESIGN.md §11).
+
+A `Session` owns everything whose cost amortizes across queries:
+
+  * the shared attribute-value cache (`(doc_id, attr) -> value`) and the
+    escalation memo — a value any query extracted is free for the rest;
+  * the per-table sampling investment (`TableSample`): the first query on
+    a table pays the ~5% full-document sampling sweep, later queries
+    whose attributes are covered reuse the statistics, thresholds, and
+    cached sample values and skip their sampling phase entirely;
+  * the session-wide `CostLedger`, with one `child()` ledger per query so
+    `QueryResult` token columns and wall time are strictly per-query;
+  * one `BatchScheduler` over one extractor/serving engine.
+
+Lifecycle: `prepare(query)` validates up front (unknown table / op /
+attribute errors surface here, never mid-extraction) and `explain()`s the
+logical plan with sample-stat cost/selectivity estimates; `submit()`
+starts execution and returns a `QueryHandle`; `QueryHandle.rows()`
+streams result rows as documents clear projection, `result()` blocks for
+the full `QueryResult`.
+
+Concurrency model: cooperative, no threads. Every submitted query is a
+`QueryRun` state machine (executor.py) yielding barrier requests; each
+`Session._step()` round collects the pending extraction needs of *all*
+in-flight queries, merges and deduplicates them, and resolves them in
+shared `BatchScheduler` rounds — so extractions from different queries
+batch into the same `extract_batch`/`engine.run()` rounds and group by
+(attr, table) for prefix-KV reuse across queries. Any blocking call
+(`rows()`, `result()`, `drain()`) advances the whole session, so progress
+never depends on which handle the caller happens to be waiting on.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Iterator, Optional, Union
+
+from .executor import QueryResult, QueryRun, TableSample, table_query_attrs
+from .expr import Query, QueryError, iter_filters
+from .ledger import CostLedger
+from .ordering import plan_expression
+from .scheduler import (OUTPUT_TOKENS, PROMPT_OVERHEAD, BatchScheduler,
+                        RunQueue)
+from .stats import SampleStats, sample_size
+
+__all__ = ["Session", "PreparedQuery", "QueryHandle", "QueryError"]
+
+
+# --------------------------------------------------------------- barriers --
+
+# A query's in-flight document coroutines are a scheduler RunQueue: one
+# `collect()` per session step mirrors one `BatchScheduler.run` round
+# (including immediate re-admission when a whole wave resolves from
+# cache), so several queries' rounds land in the same shared chunks.
+_RunBarrier = RunQueue
+
+
+class _OneShotBarrier:
+    """Base for barriers resolved wholesale in a single session round."""
+
+    def __init__(self):
+        self.ready = False
+        self.value = None
+
+
+class _ExtractBarrier(_OneShotBarrier):
+    def __init__(self, keys: list):            # [(doc_id, attr, table)]
+        super().__init__()
+        self.keys = list(keys)
+
+
+class _EscalateBarrier(_OneShotBarrier):
+    def __init__(self, keys: list):            # [(doc_id, attr)]
+        super().__init__()
+        self.keys = list(keys)
+
+
+class _FullDocsBarrier(_OneShotBarrier):
+    def __init__(self, items: list):           # [(doc_id, attrs)]
+        super().__init__()
+        self.items = list(items)
+
+
+class _SampleWait:
+    """Blocked on another query's in-progress sampling of `table`."""
+
+    def __init__(self, table: str, attrs: frozenset):
+        self.table = table
+        self.attrs = attrs
+
+
+class _SampleReservation:
+    """Marks a table's sampling as in progress, owned by one handle.
+    `prior` keeps the previously-published sample (when re-sampling an
+    uncovered table) so it can be widened into the new sweep — and
+    restored if the owner fails before publishing."""
+
+    def __init__(self, owner: "QueryHandle", prior: TableSample = None):
+        self.owner = owner
+        self.prior = prior
+
+
+class _RoundWork:
+    """One session round's merged work, deduplicated across queries by
+    (doc_id, attr) — the cache key — so the same value is never extracted
+    twice in a round no matter how many queries ask for it."""
+
+    def __init__(self):
+        self.order: list = []       # (doc_id, attr, table), arrival order
+        self.seen: set = set()      # (doc_id, attr)
+        self.owners: dict = {}      # (doc_id, attr) -> owning child ledger
+        self.extract: list = []     # (handle, _ExtractBarrier)
+        self.escalate: list = []    # (handle, _EscalateBarrier)
+        self.full: list = []        # (handle, _FullDocsBarrier)
+
+    def add_needs(self, handle: "QueryHandle", needs: list,
+                  scheduler: BatchScheduler) -> None:
+        for need in needs:
+            k = (need[0], need[1])
+            if k in self.seen:
+                scheduler.stats.dedup_hits += 1
+                continue
+            self.seen.add(k)
+            self.order.append(need)
+            self.owners[k] = handle.ledger
+
+    def add_extract(self, handle: "QueryHandle", barrier: _ExtractBarrier,
+                    scheduler: BatchScheduler) -> None:
+        self.extract.append((handle, barrier))
+        for doc_id, attr, table in barrier.keys:
+            k = (doc_id, attr)
+            if k in scheduler.cache:
+                scheduler.stats.cache_hits += 1
+            elif k in self.seen:
+                scheduler.stats.dedup_hits += 1
+            else:
+                self.seen.add(k)
+                self.order.append((doc_id, attr, table))
+                self.owners[k] = handle.ledger
+
+    @property
+    def empty(self) -> bool:
+        return not (self.order or self.extract or self.escalate or self.full)
+
+
+# ---------------------------------------------------------------- handles --
+
+
+class QueryHandle:
+    """One in-flight query. `rows()` streams result rows as documents clear
+    projection; `result()` blocks for the full `QueryResult`. Iterating or
+    blocking on any handle advances the *whole* session, so concurrent
+    handles make progress together and share extraction rounds."""
+
+    def __init__(self, session: "Session", prepared: "PreparedQuery"):
+        self.session = session
+        self.query = prepared.query
+        self.qid = session._next_qid()
+        self.ledger = session.ledger.child()
+        self.run = QueryRun(
+            self.query, retriever=session.retriever,
+            extractor=session.extractor, cache=session.cache,
+            escalated=session._escalated, ledger=self.ledger,
+            seed=session.seed, sample_rate=session.sample_rate,
+            ordering=session.ordering, join_strategy=session.join_strategy,
+            batch_size=session.scheduler.batch_size,
+            ctx_hook=session.table_context_hook)
+        self.gen = self.run.run_co()
+        self.barrier = None
+        self.send_value = None
+        self.reservations: set = set()      # tables whose sampling we own
+        self.acquired: set = set()          # tables we hold/held for execution
+        self._rows: list = []
+        self._done = False
+        self._error: Optional[BaseException] = None
+        self._result: Optional[QueryResult] = None
+        self._t0 = time.time()
+
+    # -- consumption ------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def rows(self) -> Iterator[dict]:
+        """Stream result rows in arrival order, each exactly once per
+        iterator. Drives the session until this query finishes."""
+        i = 0
+        while not self._done or i < len(self._rows):
+            if i < len(self._rows):
+                yield self._rows[i]
+                i += 1
+            else:
+                self.session._step()
+        if self._error is not None:
+            raise self._error
+
+    def result(self) -> QueryResult:
+        """Block until the query completes; returns the full QueryResult
+        (rows identical to what `rows()` streamed)."""
+        while not self._done:
+            self.session._step()
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    # -- session-side hooks ----------------------------------------------
+
+    def _emit(self, rows: list) -> None:
+        self._rows.extend(rows)
+
+    def _finish(self, meta: dict) -> None:
+        self.ledger.wall_time_s += time.time() - self._t0
+        self._result = QueryResult(list(self._rows), self.ledger,
+                                   dict(self.run._plan_log), meta=dict(meta))
+        self._done = True
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self.ledger.wall_time_s += time.time() - self._t0
+        self._done = True
+
+
+@dataclass
+class PreparedQuery:
+    """A validated query bound to a session: `explain()` before paying for
+    anything, `submit()` when ready."""
+    session: "Session"
+    query: Query
+
+    def explain(self) -> dict:
+        """Logical-plan summary with sample-stat cost/selectivity estimates
+        per stage (estimates come from the session's sampling investment
+        when the table is already sampled, defaults otherwise)."""
+        return self.session._explain(self.query)
+
+    def explain_text(self) -> str:
+        return render_explain(self.explain())
+
+    def submit(self) -> QueryHandle:
+        return self.session.submit(self)
+
+
+def render_explain(plan: dict) -> str:
+    """Human-readable rendering of `PreparedQuery.explain()`."""
+    lines = [f"QUERY  {plan['query']}",
+             f"  ordering={plan['ordering']} join_strategy="
+             f"{plan['join_strategy']} batch_size={plan['batch_size']}"]
+    for t in plan["tables"]:
+        s = t["sampling"]
+        samp = (f"sampling: reused ({s['n_sampled']} docs already paid)"
+                if s.get("reused") else
+                f"sampling: will sample ~{s['planned_sample']} docs")
+        lines.append(f"  TABLE {t['table']}: {t['candidate_docs']} candidate "
+                     f"docs | {samp}")
+        for st in t.get("stages", []):
+            lines.append(f"    - {st['filter']}  [sel={st['selectivity']}, "
+                         f"~{st['mean_cost_tokens']} tok/doc]")
+        if "est_cost_tokens_per_doc" in t:
+            lines.append(f"    => est {t['est_cost_tokens_per_doc']} tok/doc x "
+                         f"{t['candidate_docs']} docs = "
+                         f"~{t['est_total_cost_tokens']} tokens, "
+                         f"pass rate {t['est_pass_rate']}")
+        if t["select"]:
+            lines.append(f"    SELECT {', '.join(t['select'])}")
+    for j in plan["joins"]:
+        lines.append(f"  JOIN {j}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------- session --
+
+
+class Session:
+    """See module docstring. `table_context_hook(ctx, query)` is an optional
+    wrapper applied to each freshly-built TableContext (benchmarks use it to
+    substitute ground-truth statistics)."""
+
+    def __init__(self, retriever, extractor, *, sample_rate: float = 0.05,
+                 seed: int = 0, ordering: str = "quest",
+                 join_strategy: str = "transform",
+                 ledger: Optional[CostLedger] = None,
+                 batch_size: int = 1, queue_depth: int = 32,
+                 table_context_hook=None):
+        self.retriever = retriever
+        self.extractor = extractor
+        self.sample_rate = sample_rate
+        self.seed = seed
+        self.ordering = ordering
+        self.join_strategy = join_strategy
+        self.ledger = ledger if ledger is not None else CostLedger()
+        self.table_context_hook = table_context_hook
+        self.cache: dict = {}               # (doc_id, attr) -> value
+        self._escalated: set = set()        # keys already retried full-doc
+        self.scheduler = BatchScheduler(retriever, extractor, self.ledger,
+                                        self.cache, batch_size=batch_size,
+                                        queue_depth=queue_depth)
+        self._samples: dict = {}    # table -> TableSample | _SampleReservation
+        self._active: list = []     # in-flight QueryHandles, submit order
+        self._qid = 0
+
+    def _next_qid(self) -> int:
+        self._qid += 1
+        return self._qid
+
+    # ------------------------------------------------------------ prepare --
+
+    def prepare(self, query: Query) -> PreparedQuery:
+        """Validate up front: structure (tables declared for every SELECT/
+        WHERE/join reference — also enforced at Query construction) plus
+        corpus-level name resolution. Raises `QueryError`; nothing is
+        charged."""
+        query.validate()
+        corpus = getattr(self.retriever, "corpus", None)
+        if corpus is None:
+            corpus = getattr(self.extractor, "corpus", None)
+        if corpus is not None:
+            self._check_names(query, corpus)
+        return PreparedQuery(self, query)
+
+    @staticmethod
+    def _check_names(query: Query, corpus) -> None:
+        for t in query.tables:
+            if t not in corpus.tables:
+                raise QueryError(
+                    f"unknown table {t!r} (corpus tables: "
+                    f"{sorted(corpus.tables)})")
+        known_any: set = set()
+        for t in query.tables:
+            known_any |= set(corpus.attr_specs.get(t, {}))
+        for t in query.tables:
+            known = set(corpus.attr_specs.get(t, {}))
+            for a in query.select_attrs(t):
+                if a not in known:
+                    raise QueryError(
+                        f"unknown SELECT attribute {t}.{a} (table has: "
+                        f"{sorted(known)})")
+        for f in iter_filters(query.where):
+            if f.table:
+                if f.attr not in corpus.attr_specs.get(f.table, {}):
+                    raise QueryError(
+                        f"unknown WHERE attribute {f.table}.{f.attr}")
+            elif f.attr not in known_any:
+                raise QueryError(
+                    f"unknown WHERE attribute {f.attr!r} (no queried table "
+                    f"defines it)")
+        for j in query.joins:
+            for t, a in ((j.left_table, j.left_attr),
+                         (j.right_table, j.right_attr)):
+                if a not in corpus.attr_specs.get(t, {}):
+                    raise QueryError(f"unknown join attribute {t}.{a}")
+
+    # ------------------------------------------------------------ explain --
+
+    def _explain(self, query: Query) -> dict:
+        out = {"query": str(query), "ordering": self.ordering,
+               "join_strategy": self.join_strategy,
+               "batch_size": self.scheduler.batch_size,
+               "tables": [], "joins": [str(j) for j in query.joins]}
+        for t in query.tables:
+            attrs = table_query_attrs(query, t)
+            sample = self._samples.get(t)
+            covered = (isinstance(sample, TableSample)
+                       and set(attrs) <= sample.attrs)
+            stats = sample.stats if covered else SampleStats(table=t)
+            cands = len(self.retriever.candidate_docs(t, attrs))
+            entry = {
+                "table": t, "attrs": attrs, "candidate_docs": cands,
+                "sampling": ({"reused": True, "n_sampled": stats.n_sampled}
+                             if covered else
+                             {"reused": False, "planned_sample":
+                              sample_size(cands, self.sample_rate)}),
+                "select": query.select_attrs(t),
+            }
+            expr = query.where_for(t)
+            if expr is not None:
+                plan = plan_expression(
+                    expr, lambda f: stats.mean_cost(f.attr), stats.selectivity)
+                entry["plan"] = plan.describe()
+                entry["est_cost_tokens_per_doc"] = round(plan.cost, 2)
+                entry["est_total_cost_tokens"] = round(plan.cost * cands)
+                entry["est_pass_rate"] = round(plan.prob, 4)
+                entry["stages"] = [
+                    {"filter": str(f), "attr": f.attr,
+                     "selectivity": round(stats.selectivity(f), 4),
+                     "mean_cost_tokens": round(stats.mean_cost(f.attr), 2)}
+                    for f in plan.ordered_filters()]
+            out["tables"].append(entry)
+        return out
+
+    # ------------------------------------------------------------- submit --
+
+    def submit(self, prepared: Union[PreparedQuery, Query]) -> QueryHandle:
+        """Start executing a prepared query; returns its handle. Execution
+        interleaves with every other in-flight handle's from the next
+        `_step` on, whoever drives it."""
+        if isinstance(prepared, Query):
+            prepared = self.prepare(prepared)
+        if prepared.session is not self:
+            raise QueryError("prepared query belongs to a different session")
+        handle = QueryHandle(self, prepared)
+        self._active.append(handle)
+        return handle
+
+    def execute(self, query: Union[PreparedQuery, Query]) -> QueryResult:
+        """Single-query convenience: prepare + submit + block."""
+        return self.submit(query).result()
+
+    def drain(self) -> None:
+        """Drive every in-flight query to completion."""
+        while self._active:
+            self._step()
+
+    # -------------------------------------------------------- multiplexer --
+
+    def _step(self) -> bool:
+        """One multiplexed round: pump every in-flight query to its next
+        blocking point, merge all pending work, resolve it in shared
+        scheduler rounds. Returns False when nothing remains in flight."""
+        if not self._active:
+            return False
+        t0 = time.time()
+        work = _RoundWork()
+        progressed = False
+        for h in list(self._active):
+            progressed |= self._pump(h, work)
+        if not work.empty:
+            progressed = True
+            self._resolve_work(work)
+        self.ledger.wall_time_s += time.time() - t0
+        if not progressed and self._active:
+            raise RuntimeError(
+                "session stalled: in-flight queries cannot make progress")
+        return bool(self._active)
+
+    def _pump(self, h: QueryHandle, work: _RoundWork) -> bool:
+        """Advance one handle as far as it can go without resolving new
+        extractions; contribute its blocked work to the round."""
+        progressed = False
+        while True:
+            b = h.barrier
+            if b is None:
+                try:
+                    op = h.gen.send(h.send_value)
+                except StopIteration as stop:
+                    self._finish(h, stop.value or {})
+                    return True
+                except Exception as err:    # noqa: BLE001 — query-scoped
+                    self._failed(h, err)
+                    return True
+                h.send_value = None
+                progressed = True
+                kind = op[0]
+                if kind == "rows":
+                    h._emit(op[1])
+                elif kind == "sample_publish":
+                    self._publish_sample(h, op[1])
+                elif kind == "sample_acquire":
+                    got = self._try_acquire(h, op[1], frozenset(op[2]))
+                    if got is None:
+                        h.barrier = _SampleWait(op[1], frozenset(op[2]))
+                        return progressed
+                    h.send_value = got
+                elif kind == "run":
+                    h.barrier = _RunBarrier(op[1], self.scheduler.queue_depth)
+                elif kind == "extract":
+                    h.barrier = _ExtractBarrier(op[1])
+                elif kind == "escalate":
+                    h.barrier = _EscalateBarrier(op[1])
+                elif kind == "full_docs":
+                    h.barrier = _FullDocsBarrier(op[1])
+                else:
+                    self._failed(h, RuntimeError(f"unknown barrier {kind!r}"))
+                    return True
+                continue
+            if isinstance(b, _SampleWait):
+                got = self._try_acquire(h, b.table, b.attrs)
+                if got is None:
+                    return progressed
+                h.barrier, h.send_value = None, got
+                progressed = True
+                continue
+            if isinstance(b, _RunBarrier):
+                try:
+                    needs = b.collect(self.scheduler)
+                except Exception as err:    # noqa: BLE001 — a document
+                    # coroutine raised: fail this query only, like the
+                    # gen.send path (its uncontributed needs are dropped)
+                    self._failed(h, err)
+                    return True
+                if b.done:
+                    h.barrier, h.send_value = None, b.results
+                    progressed = True
+                    continue
+                work.add_needs(h, needs, self.scheduler)
+                return progressed
+            if b.ready:
+                h.barrier, h.send_value = None, b.value
+                progressed = True
+                continue
+            if isinstance(b, _ExtractBarrier):
+                work.add_extract(h, b, self.scheduler)
+            elif isinstance(b, _EscalateBarrier):
+                work.escalate.append((h, b))
+            elif isinstance(b, _FullDocsBarrier):
+                work.full.append((h, b))
+            return progressed
+
+    def _resolve_work(self, work: _RoundWork) -> None:
+        # sampling rounds first (a query can only be in one phase at a time,
+        # so ordering across barrier kinds never reorders within a query)
+        if work.full:
+            items, owners, spans = [], [], []
+            for h, b in work.full:
+                spans.append((b, len(items), len(b.items)))
+                items.extend(b.items)
+                owners.extend([h.ledger] * len(b.items))
+            res = self.scheduler.extract_full_doc_items(items, owners)
+            for b, off, n in spans:
+                b.value = {d: r for (d, _a), r in
+                           zip(b.items, res[off:off + n])}
+                b.ready = True
+        if work.order:
+            self.scheduler.resolve_round(work.order, owners=work.owners)
+        for _h, b in work.extract:
+            b.value = {(d, a): self.cache.get((d, a)) for d, a, _t in b.keys}
+            b.ready = True
+        if work.escalate:
+            self._resolve_escalations(work.escalate)
+
+    def _resolve_escalations(self, escalations: list) -> None:
+        """Full-document-prompt retries for output-critical attrs
+        (DESIGN.md §8.3), batched across queries. The same key requested by
+        several queries in one round is retried once (first owner pays,
+        everyone receives the value); the session escalation memo is marked
+        here, at resolve time, so a query pumped later in the same step
+        never mistakes an in-flight retry for an already-settled one."""
+        corpus = self.extractor.corpus
+        flat = []
+        for h, b in escalations:
+            for k in b.keys:
+                if k in self._escalated:    # settled, or claimed this round
+                    continue
+                self._escalated.add(k)
+                flat.append((k[0], k[1], h))
+        bs = self.scheduler.batch_size
+        for i in range(0, len(flat), bs):
+            chunk = flat[i:i + bs]
+            batch = [(d, a, [corpus.docs[d].text]) for d, a, _h in chunk]
+            out = self.extractor.extract_batch(batch)
+            self.ledger.record_batch(len(batch))
+            self.scheduler.record_owner_batches(h.ledger for _d, _a, h in chunk)
+            for (d, a, h), (value, inp_tokens) in zip(chunk, out):
+                h.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
+                                out=OUTPUT_TOKENS, phase="query")
+                if value is not None:
+                    self.cache[(d, a)] = value
+        for _h, b in escalations:
+            b.value = {k: self.cache.get(k) for k in b.keys}
+            b.ready = True
+
+    # ------------------------------------------------- sampling ownership --
+
+    def _try_acquire(self, h: QueryHandle, table: str, attrs: frozenset):
+        """Resolve a sample_acquire: reuse a covering published sample,
+        wait on another query's in-progress sampling, or reserve the table
+        and sample ourselves. An *uncovered* query first waits for every
+        in-flight query already executing on the table to finish — its
+        re-sampling mutates the shared thresholds/evidence/cache, which
+        must never happen under a running query — then re-samples the
+        union of its attrs and the prior sample's, so paid coverage only
+        ever grows."""
+        cur = self._samples.get(table)
+        if isinstance(cur, TableSample) and attrs <= cur.attrs:
+            h.acquired.add(table)
+            return ("reuse", cur)
+        if isinstance(cur, _SampleReservation):
+            if cur.owner is h:
+                return ("own", cur.prior)
+            return None
+        if isinstance(cur, TableSample):     # published but not covering
+            if any(o is not h and table in o.acquired for o in self._active):
+                return None                  # wait for the table to go quiet
+            self._samples[table] = _SampleReservation(h, prior=cur)
+        else:
+            self._samples[table] = _SampleReservation(h)
+        h.reservations.add(table)
+        h.acquired.add(table)
+        return ("own", self._samples[table].prior)
+
+    def _publish_sample(self, h: QueryHandle, sample: TableSample) -> None:
+        self._samples[sample.table] = sample
+        h.reservations.discard(sample.table)
+
+    def _release(self, h: QueryHandle) -> None:
+        """A finished/failed handle's unpublished reservations are rolled
+        back — to the prior published sample when re-sampling, else cleared
+        — so waiters re-acquire instead of stalling."""
+        for table in list(h.reservations):
+            cur = self._samples.get(table)
+            if isinstance(cur, _SampleReservation) and cur.owner is h:
+                if cur.prior is not None:
+                    self._samples[table] = cur.prior
+                else:
+                    del self._samples[table]
+        h.reservations.clear()
+
+    def _finish(self, h: QueryHandle, meta: dict) -> None:
+        h._finish(meta)
+        self._active.remove(h)
+        self._release(h)
+
+    def _failed(self, h: QueryHandle, err: BaseException) -> None:
+        h._fail(err)
+        self._active.remove(h)
+        self._release(h)

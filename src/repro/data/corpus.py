@@ -83,6 +83,15 @@ class Corpus:
         dom = self.domain_of_table[table]
         return {d: doc.truth for d, doc in self.docs.items() if doc.domain == dom}
 
+    def subset(self, doc_ids) -> "Corpus":
+        """Restrict to `doc_ids` (CI-sized workloads). Every table keeps
+        the full restricted pool as candidates — like the generators, table
+        membership stays something the index must discover, not a given."""
+        ids = [d for d in doc_ids if d in self.docs]
+        return Corpus(f"{self.name}-subset", {d: self.docs[d] for d in ids},
+                      {t: list(ids) for t in self.tables}, self.attr_specs,
+                      self.domain_of_table)
+
 
 # --------------------------------------------------------------- helpers ---
 

@@ -1,0 +1,490 @@
+"""Session layer (DESIGN.md §11): query lifecycle + multi-query semantics.
+
+Covers the API-redesign invariants:
+  * validation at construction / prepare time (unknown op, foreign-table
+    references, unknown table/attr names) — never mid-extraction;
+  * no cross-query state leakage on one engine (per-query plan log, wall
+    time, token columns; session ledger = sum of children);
+  * sampling-investment reuse: a covered second query skips sampling;
+  * concurrency invariance: N disjoint queries multiplexed through one
+    Session produce rows and per-query ledger token columns identical to
+    fresh serial engines (oracle + served paths);
+  * streaming: `rows()` yields every row exactly once and agrees with
+    `.result()`;
+  * `explain()` estimates match the session's sample statistics.
+"""
+import pytest
+
+from repro.core import (Engine, Filter, JoinEdge, Query, QueryError, Session,
+                        conj, plan_expression)
+from repro.data.corpus import Corpus, make_swde_corpus, make_wiki_corpus
+from repro.extract import OracleExtractor
+from repro.index.retriever import TwoLevelRetriever
+
+
+@pytest.fixture(scope="module")
+def wiki():
+    return make_wiki_corpus(seed=0)
+
+
+def _row_key(r):
+    return tuple(sorted(r["_docs"].items()))
+
+
+def _assert_equivalent(res_a, res_b):
+    assert sorted(map(_row_key, res_a.rows)) == sorted(map(_row_key, res_b.rows))
+    led_a, led_b = res_a.ledger, res_b.ledger
+    assert led_a.input_tokens == led_b.input_tokens
+    assert led_a.output_tokens == led_b.output_tokens
+    assert led_a.extractions == led_b.extractions
+    assert led_a.per_phase == led_b.per_phase
+
+
+def _players_query(age=30, stars=5):
+    return Query(tables=["players"], select=[("players", "player_name")],
+                 where=conj(Filter("age", ">", age, table="players"),
+                            Filter("all_stars", ">=", stars, table="players")))
+
+
+def _teams_query():
+    return Query(tables=["teams"], select=[("teams", "location")],
+                 where=Filter("championships", ">", 14, table="teams"))
+
+
+def _owners_query():
+    return Query(tables=["owners"], select=[("owners", "industry")],
+                 where=Filter("net_worth", ">", 3.0, table="owners"))
+
+
+# ------------------------------------------------------------- validation --
+
+
+def test_filter_op_validated_at_construction():
+    with pytest.raises(QueryError, match="unknown op"):
+        Filter("age", "~=", 30)
+    # the valid set still constructs
+    for op in ("=", "!=", ">", ">=", "<", "<=", "between", "in", "contains"):
+        Filter("age", op, 1, value2=2)
+
+
+def test_query_rejects_foreign_table_references():
+    with pytest.raises(QueryError, match="SELECT"):
+        Query(tables=["players"], select=[("teams", "team_name")])
+    with pytest.raises(QueryError, match="WHERE"):
+        Query(tables=["players"], select=[("players", "player_name")],
+              where=Filter("championships", ">", 1, table="teams"))
+    with pytest.raises(QueryError, match="join"):
+        Query(tables=["players"], select=[("players", "player_name")],
+              joins=[JoinEdge("players", "team_name", "teams", "team_name")])
+    with pytest.raises(QueryError, match="no tables"):
+        Query(tables=[], select=[])
+
+
+def test_prepare_rejects_unknown_names(wiki):
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki))
+    with pytest.raises(QueryError, match="unknown table"):
+        sess.prepare(Query(tables=["astronauts"],
+                           select=[("astronauts", "name")]))
+    with pytest.raises(QueryError, match="unknown SELECT attribute"):
+        sess.prepare(Query(tables=["players"],
+                           select=[("players", "shoe_size")]))
+    with pytest.raises(QueryError, match="unknown WHERE attribute"):
+        sess.prepare(Query(tables=["players"],
+                           select=[("players", "player_name")],
+                           where=Filter("shoe_size", ">", 10, table="players")))
+    with pytest.raises(QueryError, match="unknown join attribute"):
+        sess.prepare(Query(
+            tables=["players", "teams"],
+            select=[("players", "player_name")],
+            joins=[JoinEdge("players", "player_name", "teams", "shoe_size")]))
+    # validation never charges anything
+    assert sess.ledger.total_tokens == 0
+    # and a valid query passes
+    sess.prepare(_players_query())
+
+
+# ------------------------------------------- per-query state (satellite 1) --
+
+
+def test_sequential_queries_no_state_leak(wiki):
+    """Regression: `_plan_log` / wall time used to accumulate across
+    `execute()` calls on one engine, so the second QueryResult reported the
+    first query's plans and double-counted wall time."""
+    eng = Engine(TwoLevelRetriever(wiki), OracleExtractor(wiki), batch_size=8)
+    r1 = eng.execute(_players_query(30, 5))
+    r2 = eng.execute(Query(tables=["players"],
+                           select=[("players", "player_name")],
+                           where=Filter("age", ">", 35, table="players")))
+    # per-query plan logs: q2's log only holds q2 plans
+    assert r2.plans_sampled
+    for plan in r2.plans_sampled.values():
+        assert "> 35" in plan and "all_stars" not in plan
+    assert any("all_stars" in p for p in r1.plans_sampled.values())
+    # per-query wall time sums to the session's, no double counting
+    assert r1.ledger.wall_time_s > 0 and r2.ledger.wall_time_s > 0
+    total = eng.ledger.wall_time_s
+    assert r1.ledger.wall_time_s < total and r2.ledger.wall_time_s < total
+    # the old bug double-counted (q2 reported q1's time too: sum ≈ 2x);
+    # generous tolerance keeps this robust on noisy shared CPUs
+    assert r1.ledger.wall_time_s + r2.ledger.wall_time_s \
+        == pytest.approx(total, rel=0.2)
+    # per-query token columns sum to the session ledger
+    assert r1.ledger.total_tokens + r2.ledger.total_tokens \
+        == eng.ledger.total_tokens
+    # q2's attrs are covered by q1's sampling -> reused, sampling column 0
+    assert r2.meta["sampling_reused"] == {"players": True}
+    assert r2.ledger.per_phase.get("sampling", 0) == 0
+    assert r1.ledger.per_phase["sampling"] > 0
+
+
+# --------------------------------------------------- concurrency invariance --
+
+
+def test_concurrent_disjoint_queries_match_fresh_engines(wiki):
+    """N queries on disjoint tables multiplexed through one Session must
+    produce rows and per-query token columns identical to the same queries
+    run serially on fresh engines (the test_batching invariant, lifted to
+    whole queries)."""
+    queries = [_players_query(), _teams_query(), _owners_query()]
+    serial = [Engine(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                     batch_size=8).execute(q) for q in queries]
+
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=8)
+    handles = [sess.submit(sess.prepare(q)) for q in queries]
+    # drive via the *last* handle first: progress must not depend on which
+    # handle the caller waits on
+    results = [handles[-1].result()] and [h.result() for h in handles]
+    for s, c in zip(serial, results):
+        _assert_equivalent(s, c)
+    assert not sess._active
+    # the merged rounds stay within each query's sum (sharing never costs)
+    assert sess.ledger.total_tokens == sum(r.ledger.total_tokens
+                                           for r in results)
+
+
+def test_concurrent_same_table_rows_match_serial_session(wiki):
+    """Two queries on the SAME table: the second reuses the first's
+    sampling investment. Concurrent submission must yield exactly the rows
+    of serial submission through an identical session."""
+    q1 = _players_query(30, 5)
+    q2 = Query(tables=["players"], select=[("players", "player_name")],
+               where=Filter("age", ">", 35, table="players"))
+
+    serial = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                     batch_size=8)
+    s1 = serial.execute(q1)
+    s2 = serial.execute(q2)
+
+    conc = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=8)
+    h1, h2 = conc.submit(q1), conc.submit(q2)
+    c2, c1 = h2.result(), h1.result()
+
+    assert sorted(map(_row_key, s1.rows)) == sorted(map(_row_key, c1.rows))
+    assert sorted(map(_row_key, s2.rows)) == sorted(map(_row_key, c2.rows))
+    # in both sessions the second query skipped sampling (stats reuse);
+    # under concurrency it *waited* for q1's sampling rather than re-paying
+    for r in (s2, c2):
+        assert r.meta["sampling_reused"] == {"players": True}
+        assert r.ledger.per_phase.get("sampling", 0) == 0
+
+
+# ---------------------------------------------------------------- streaming --
+
+
+def test_rows_streams_each_row_exactly_once(wiki):
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=8)
+    h = sess.submit(_players_query())
+    it = h.rows()
+    first = next(it)
+    streamed = [first] + list(it)
+    res = h.result()
+    assert streamed == res.rows
+    assert len({_row_key(r) for r in streamed}) == len(streamed)
+    # a fresh iterator replays the same rows (it never mutates the result)
+    assert list(h.rows()) == res.rows
+
+
+@pytest.mark.parametrize("queue_depth", [1, 2, 16])
+def test_small_queue_depth_never_stalls(wiki, queue_depth):
+    """Regression: when an entire admitted wave of document coroutines
+    resolves from the session cache (no extraction needs), the run queue
+    must re-admit the next wave instead of reporting a stalled round —
+    with small queue_depth the sampled docs alone trigger this."""
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=4, queue_depth=queue_depth)
+    r1 = sess.execute(_players_query())
+    assert r1.rows
+    # second covered query runs almost entirely from cache — the extreme
+    # all-cached-wave case
+    r2 = sess.execute(Query(tables=["players"],
+                            select=[("players", "player_name")],
+                            where=Filter("age", ">", 35, table="players")))
+    assert r2.rows and r2.meta["sampling_reused"] == {"players": True}
+
+
+def test_rows_streams_before_completion(wiki):
+    """With batch_size=1 projection streams row by row: the first row must
+    arrive while the query is still in flight (documents still projecting)."""
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=1)
+    h = sess.submit(_players_query())
+    it = h.rows()
+    first = next(it)
+    assert first is not None and not h.done
+    rest = list(it)
+    assert h.done and [first] + rest == h.result().rows
+
+
+# ------------------------------------------------------------------ explain --
+
+
+def test_explain_reports_sample_stat_estimates(wiki):
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=8)
+    sess.execute(_players_query(30, 5))       # pays the sampling investment
+    stats = sess._samples["players"].stats
+
+    q = _players_query(35, 8)
+    prep = sess.prepare(q)
+    ex = prep.explain()
+    tbl = ex["tables"][0]
+    assert tbl["table"] == "players"
+    assert tbl["sampling"] == {"reused": True, "n_sampled": stats.n_sampled}
+    f_age = Filter("age", ">", 35, table="players")
+    f_stars = Filter("all_stars", ">=", 8, table="players")
+    by_attr = {s["attr"]: s for s in tbl["stages"]}
+    assert by_attr["age"]["selectivity"] == round(stats.selectivity(f_age), 4)
+    assert by_attr["all_stars"]["selectivity"] == \
+        round(stats.selectivity(f_stars), 4)
+    assert by_attr["age"]["mean_cost_tokens"] == round(stats.mean_cost("age"), 2)
+    plan = plan_expression(q.where, lambda f: stats.mean_cost(f.attr),
+                           stats.selectivity)
+    assert tbl["est_cost_tokens_per_doc"] == round(plan.cost, 2)
+    assert tbl["est_pass_rate"] == round(plan.prob, 4)
+    assert [s["filter"] for s in tbl["stages"]] == \
+        [str(f) for f in plan.ordered_filters()]
+    # unsampled table -> default estimates, planned sample size reported
+    ex2 = sess.prepare(_teams_query()).explain()
+    assert ex2["tables"][0]["sampling"]["reused"] is False
+    assert ex2["tables"][0]["sampling"]["planned_sample"] > 0
+    assert ex2["tables"][0]["stages"][0]["selectivity"] == 0.5
+    # rendering works and names the key facts
+    text = prep.explain_text()
+    assert "players" in text and "sel=" in text
+
+
+def test_uncovered_resample_widens_coverage(wiki):
+    """An uncovered query re-samples the UNION of its attrs and the prior
+    sample's, so a third query covered by the original investment never
+    re-pays (coverage only grows)."""
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=8)
+    sess.execute(Query(tables=["players"],
+                       select=[("players", "player_name")],
+                       where=Filter("age", ">", 35, table="players")))
+    # uncovered: all_stars was never sampled -> re-sample, widened
+    r2 = sess.execute(Query(tables=["players"],
+                            select=[("players", "player_name")],
+                            where=Filter("all_stars", ">=", 10,
+                                         table="players")))
+    assert r2.meta["sampling_reused"] == {"players": False}
+    assert {"age", "all_stars", "player_name"} \
+        <= set(sess._samples["players"].attrs)
+    # covered by the ORIGINAL attrs: still free after the replacement
+    r3 = sess.execute(Query(tables=["players"],
+                            select=[("players", "player_name")],
+                            where=Filter("age", ">", 38, table="players")))
+    assert r3.meta["sampling_reused"] == {"players": True}
+    assert r3.ledger.per_phase.get("sampling", 0) == 0
+
+
+def test_concurrent_uncovered_resample_waits_for_quiet_table(wiki):
+    """An uncovered query must not re-sample (mutating shared thresholds /
+    evidence / cache) while another query is mid-flight on the table: it
+    waits, so concurrent submission yields exactly the serial-session
+    rows."""
+    q1 = _players_query(30, 5)                      # attrs {age, all_stars, player_name}
+    q2 = Query(tables=["players"], select=[("players", "player_name")],
+               where=Filter("ppg", ">", 12.0, table="players"))  # uncovered
+
+    serial = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                     batch_size=8)
+    s1, s2 = serial.execute(q1), serial.execute(q2)
+
+    conc = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=8)
+    h1, h2 = conc.submit(q1), conc.submit(q2)
+    c2, c1 = h2.result(), h1.result()
+
+    assert sorted(map(_row_key, s1.rows)) == sorted(map(_row_key, c1.rows))
+    assert sorted(map(_row_key, s2.rows)) == sorted(map(_row_key, c2.rows))
+    for r in (s2, c2):
+        assert r.meta["sampling_reused"] == {"players": False}
+
+
+# ------------------------------------------- escalation + failure isolation --
+
+
+class _StubRetriever:
+    """Minimal duck-typed retriever: every doc has one 5-token segment per
+    attribute; no thresholds, no evidence."""
+
+    def __init__(self, corpus):
+        self.corpus = corpus
+
+    def candidate_docs(self, table, attrs):
+        return sorted(self.corpus.tables[table])
+
+    refine_candidates = candidate_docs
+
+    def segments(self, doc_id, attr, table=None):
+        return [f"{attr} segment of {doc_id}"]
+
+    def segment_tokens(self, doc_id, attr, table=None):
+        return 5
+
+    def add_evidence(self, table, attr, segments):
+        pass
+
+    def finalize_thresholds(self, table, attrs, stats):
+        pass
+
+
+class _StubExtractor:
+    """Segment-scoped extraction of `flaky` attrs returns None (present but
+    unparseable); the full-document escalation prompt recovers the truth.
+    Counts escalations per key to verify single-charge semantics."""
+
+    def __init__(self, corpus, flaky):
+        self.corpus = corpus
+        self.flaky = set(flaky)
+        self.escalations = []
+
+    def extract_batch(self, items):
+        out = []
+        for doc_id, attr, segs in items:
+            full_doc = segs == [self.corpus.docs[doc_id].text]
+            if full_doc:
+                self.escalations.append((doc_id, attr))
+            value = (self.corpus.docs[doc_id].truth[attr]
+                     if (full_doc or attr not in self.flaky) else None)
+            out.append((value, 5))
+        return out
+
+    def extract_full_doc_batch(self, items):
+        res = []
+        for doc_id, attrs in items:
+            truth = self.corpus.docs[doc_id].truth
+            vals = {a: (None if a in self.flaky else truth[a]) for a in attrs}
+            res.append((vals, {}, 10))
+        return res
+
+
+def _stub_world():
+    from repro.data.corpus import AttrSpec, Document
+    docs, specs = {}, {"x": AttrSpec("x", "int", "x value", [], r"x=(\d+)"),
+                       "name": AttrSpec("name", "str", "the name", [],
+                                        r"name=(\w+)")}
+    for i in range(4):
+        d = f"t/{i}"
+        docs[d] = Document(d, "t", f"document {i}",
+                           truth={"x": i + 1, "name": f"N{i}"})
+    corpus = Corpus("stub", docs, {"t": sorted(docs)}, {"t": specs},
+                    {"t": "t"})
+    return corpus
+
+
+def test_concurrent_escalation_shares_one_retry_and_drops_no_rows():
+    """Regression: two concurrent queries SELECTing the same output-critical
+    attribute whose segment extraction fails must each keep their rows —
+    the same-round escalation is shared (first owner pays), not skipped by
+    whichever query is pumped second."""
+    corpus = _stub_world()
+    sess = Session(_StubRetriever(corpus),
+                   _StubExtractor(corpus, flaky={"name"}), batch_size=4)
+    q1 = Query(tables=["t"], select=[("t", "name")],
+               where=Filter("x", ">", 0, table="t"))
+    q2 = Query(tables=["t"], select=[("t", "name")],
+               where=Filter("x", ">", 1, table="t"))
+    h1, h2 = sess.submit(q1), sess.submit(q2)
+    r1, r2 = h1.result(), h2.result()
+    assert sorted(r["t.name"] for r in r1.rows) == ["N0", "N1", "N2", "N3"]
+    assert sorted(r["t.name"] for r in r2.rows) == ["N1", "N2", "N3"]
+    # one full-doc retry per key across BOTH queries
+    esc = sess.extractor.escalations
+    assert len(esc) == len(set(esc)) == 4
+
+
+def test_coroutine_failure_isolated_to_its_query(wiki):
+    """A query whose document coroutine raises fails only its own handle;
+    concurrent queries on the same session complete normally."""
+
+    class _Poisoned(TwoLevelRetriever):
+        def segment_tokens(self, doc_id, attr, table=None):
+            if attr == "championships":
+                raise RuntimeError("index shard offline")
+            return super().segment_tokens(doc_id, attr, table)
+
+    sess = Session(_Poisoned(wiki), OracleExtractor(wiki), batch_size=8)
+    good, bad = sess.submit(_players_query()), sess.submit(_teams_query())
+    with pytest.raises(RuntimeError, match="index shard offline"):
+        bad.result()
+    res = good.result()
+    assert res.rows and not sess._active
+    # the failed handle's sampling reservation was released
+    assert not bad.reservations
+
+
+# ------------------------------------------------------------- served path --
+
+
+def _mini_swde(n_per_table=8):
+    full = make_swde_corpus()
+    uni = [d for d in sorted(full.docs) if "universities" in d][:n_per_table]
+    lap = [d for d in sorted(full.docs) if "laptops" in d][:n_per_table]
+    return full.subset(uni + lap)
+
+
+def test_served_concurrent_queries_match_fresh_engines():
+    """Concurrency invariance on the REAL serving engine: two disjoint
+    queries multiplexed over one engine produce the same rows and token
+    columns as fresh serial engines, in fewer or equal engine runs."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.data import lm_data
+    from repro.extract.served import ServedExtractor
+    from repro.models import init_params
+    from repro.serving.engine import ServingEngine
+
+    corpus = _mini_swde()
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qa = Query(tables=["universities"],
+               select=[("universities", "university_name")],
+               where=Filter("tuition", "<", 30000, table="universities"))
+    qb = Query(tables=["laptops"], select=[("laptops", "model_name")],
+               where=Filter("ram_gb", ">=", 16, table="laptops"))
+
+    def fresh(q):
+        eng = ServingEngine(cfg, params, slots=4, max_len=1024,
+                            prefix_cache=True)
+        e = Engine(TwoLevelRetriever(corpus),
+                   ServedExtractor(corpus, eng, max_new=6), batch_size=4)
+        return e.execute(q), eng.stats["runs"]
+
+    ra, runs_a = fresh(qa)
+    rb, runs_b = fresh(qb)
+
+    eng = ServingEngine(cfg, params, slots=4, max_len=1024, prefix_cache=True)
+    sess = Session(TwoLevelRetriever(corpus),
+                   ServedExtractor(corpus, eng, max_new=6), batch_size=4)
+    ha, hb = sess.submit(qa), sess.submit(qb)
+    res_a, res_b = ha.result(), hb.result()
+
+    _assert_equivalent(ra, res_a)
+    _assert_equivalent(rb, res_b)
+    # multiplexing shares rounds; it must never need more engine runs
+    assert eng.stats["runs"] <= runs_a + runs_b
