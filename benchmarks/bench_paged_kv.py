@@ -1,0 +1,175 @@
+"""Paged KV cache + chunked prefill vs the slab layout (DESIGN.md §12).
+
+Workload: the scheduler-shaped batch of (doc, attr) extraction needs a
+QUEST plan emits over the synthetic SWDE corpus, run through the serving
+engine twice with the shared-prefix KV cache ON in both:
+
+  slab   — PR 2's layout: per-slot contiguous KV; a prefix hit copies a
+           materialized snapshot into the slot and the unshared suffix
+           prefills one token per decode step.
+  paged  — block/page-table layout: a prefix hit is an O(1) page-id splice
+           (copy-on-write boundary page) and the suffix prefills in
+           fixed-size chunks.
+
+Both paths must return byte-identical result rows. The paged path must do
+strictly fewer prefill jit invocations (chunks vs per-token suffix steps),
+compute against materially fewer KV positions during prefill (the
+attention-FLOPs proxy `prefill_ctx_positions` — token-steps pay the whole
+max_len buffer each, chunks only their pow2-bucketed context view), and
+peak at fewer KV-cache bytes (pages in use vs full per-slot slabs + a
+snapshot copy per prefix entry). Wall-clock improves at batch >= 8 (full
+mode; reported in smoke too, asserted only where CI noise can't flake it).
+
+Emits `benchmarks/out/BENCH_paged_kv.json` (compared against the committed
+baseline by `benchmarks/compare.py` in CI) plus a CSV of both paths.
+`--smoke` runs the reduced CI-sized workload.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.ledger import CostLedger
+from repro.core.scheduler import BatchScheduler
+from repro.data import lm_data
+from repro.data.corpus import make_swde_corpus
+from repro.extract.served import ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+
+OUT = Path(__file__).parent / "out"
+ATTRS = ["tuition", "enrollment", "university_name"]
+
+
+def _items(corpus, n_docs: int):
+    docs = sorted(corpus.tables["universities"])[:n_docs]
+    return [(d, a, "universities") for d in docs for a in ATTRS]
+
+
+def _run_path(corpus, items, *, layout: str, batch: int):
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, slots=batch, max_len=1024,
+                           prefix_cache=True, kv_layout=layout)
+    extractor = ServedExtractor(corpus, engine, max_new=8)
+    ledger = CostLedger()
+    retriever = TwoLevelRetriever(corpus, mode="rag_topk")
+    sched = BatchScheduler(retriever, extractor, ledger, {}, batch_size=batch)
+    t0 = time.time()
+    rows = sched.extract_many(items)
+    wall = time.time() - t0
+    s = engine.stats
+    return {
+        "rows": rows,
+        "wall_s": wall,
+        "prefill_tokens": s["prefill_tokens"],
+        "prefill_invocations": s["prefill_invocations"],
+        "prefill_chunks": s["prefill_chunks"],
+        "prefill_ctx_positions": s["prefill_ctx_positions"],
+        "prefix_hits": s["prefix_hits"],
+        "prefix_saved_tokens": s["prefix_saved_tokens"],
+        "cow_copies": s["cow_copies"],
+        "kv_bytes_peak": s["kv_bytes_peak"],
+        "decode_steps": s["decode_steps"],
+        "ledger": ledger.snapshot(),
+    }
+
+
+def run(quick: bool = False, smoke: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = quick or smoke
+    corpus = make_swde_corpus()
+    items = _items(corpus, 6 if small else 16)
+    batch = 8
+
+    slab = _run_path(corpus, items, layout="slab", batch=batch)
+    paged = _run_path(corpus, items, layout="paged", batch=batch)
+
+    rows_identical = paged["rows"] == slab["rows"]
+    ledger_identical = all(paged["ledger"][c] == slab["ledger"][c]
+                           for c in ("input_tokens", "output_tokens",
+                                     "total_tokens", "per_phase"))
+    inv_ratio = paged["prefill_invocations"] / max(slab["prefill_invocations"], 1)
+    ctx_ratio = paged["prefill_ctx_positions"] / max(slab["prefill_ctx_positions"], 1)
+    bytes_ratio = paged["kv_bytes_peak"] / max(slab["kv_bytes_peak"], 1)
+    wall_ratio = paged["wall_s"] / max(slab["wall_s"], 1e-9)
+
+    result = {
+        "bench": "paged_kv",
+        "smoke": bool(small),
+        "items": len(items),
+        "batch": batch,
+        "rows_identical": rows_identical,
+        "ledger_token_columns_identical": ledger_identical,
+        "prefill_tokens_slab": slab["prefill_tokens"],
+        "prefill_tokens_paged": paged["prefill_tokens"],
+        "prefill_invocations_slab": slab["prefill_invocations"],
+        "prefill_invocations_paged": paged["prefill_invocations"],
+        "prefill_invocation_ratio": round(inv_ratio, 4),
+        "prefill_ctx_positions_slab": slab["prefill_ctx_positions"],
+        "prefill_ctx_positions_paged": paged["prefill_ctx_positions"],
+        "prefill_ctx_ratio": round(ctx_ratio, 4),
+        "kv_bytes_peak_slab": slab["kv_bytes_peak"],
+        "kv_bytes_peak_paged": paged["kv_bytes_peak"],
+        "kv_bytes_ratio": round(bytes_ratio, 4),
+        "prefix_hits": paged["prefix_hits"],
+        "cow_copies": paged["cow_copies"],
+        "wall_slab_s": round(slab["wall_s"], 3),
+        "wall_paged_s": round(paged["wall_s"], 3),
+        "wall_ratio_paged_over_slab": round(wall_ratio, 4),
+    }
+    with open(OUT / "BENCH_paged_kv.json", "w") as f:
+        json.dump(result, f, indent=2)
+    with open(OUT / "paged_kv.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["path", "prefill_tokens", "prefill_invocations",
+                    "prefill_ctx_positions", "kv_bytes_peak", "prefix_hits",
+                    "wall_s"])
+        for name, r in (("slab", slab), ("paged", paged)):
+            w.writerow([name, r["prefill_tokens"], r["prefill_invocations"],
+                        r["prefill_ctx_positions"], r["kv_bytes_peak"],
+                        r["prefix_hits"], f"{r['wall_s']:.3f}"])
+
+    print(f"paged_kv: {len(items)} extractions @ batch {batch} | "
+          f"rows identical: {rows_identical} | prefill invocations "
+          f"{slab['prefill_invocations']} -> {paged['prefill_invocations']} "
+          f"({1 - inv_ratio:.1%} fewer) | prefill ctx positions "
+          f"{slab['prefill_ctx_positions']} -> {paged['prefill_ctx_positions']} "
+          f"({1 - ctx_ratio:.1%} fewer) | kv bytes peak "
+          f"{slab['kv_bytes_peak']} -> {paged['kv_bytes_peak']} "
+          f"({1 - bytes_ratio:.1%} lower) | wall "
+          f"{slab['wall_s']:.2f}s -> {paged['wall_s']:.2f}s")
+
+    assert rows_identical, "paged layout changed result rows"
+    assert ledger_identical, "paged layout leaked into ledger token columns"
+    assert paged["prefill_tokens"] == slab["prefill_tokens"], \
+        "logical prefill-token accounting must be layout-invariant"
+    assert paged["prefill_invocations"] < slab["prefill_invocations"], \
+        "chunked prefill must use fewer jit invocations than per-token suffix"
+    assert ctx_ratio < 0.5, (
+        f"prefill ctx-position (FLOPs proxy) ratio {ctx_ratio:.2f} not "
+        f"materially lower")
+    assert bytes_ratio < 1.0, (
+        f"paged peak KV bytes {paged['kv_bytes_peak']} not below slab "
+        f"{slab['kv_bytes_peak']}")
+    if not small:
+        assert wall_ratio < 1.0, (
+            f"paged wall {paged['wall_s']:.2f}s not below slab "
+            f"{slab['wall_s']:.2f}s at batch {batch}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

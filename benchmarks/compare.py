@@ -1,0 +1,147 @@
+"""Benchmark-regression gate: diff fresh BENCH_*.json against committed
+baselines and fail CI on a >10% regression.
+
+Baselines live in `benchmarks/baselines/BENCH_<name>.json` (committed smoke
+runs); fresh results in `benchmarks/out/` (written by the bench scripts).
+Three kinds of checks per bench:
+
+  invariants — booleans that must simply hold in the fresh run
+              (rows_identical, ledger columns untouched, ...);
+  metrics    — deterministic counters (prefill tokens/invocations, hit
+              counts, byte ratios): regression if the fresh value is >10%
+              worse than baseline in the metric's direction;
+  wall       — wall-clock, compared in *within-run ratio* form
+              (e.g. wall_on/wall_off) so the gate transfers across machine
+              speeds; >10% worse than the baseline ratio fails (tunable
+              via --wall-tol for noisy runners).
+
+Exit code 0 = green, 1 = regression (or missing/mismatched files).
+
+    python benchmarks/compare.py --bench paged_kv
+    python benchmarks/compare.py            # all benches with a baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).parent
+BASELINES = HERE / "baselines"
+FRESH = HERE / "out"
+
+# direction: "lower" = lower is better, "higher" = higher is better
+SPECS = {
+    "prefix_cache": {
+        "invariants": ["rows_identical", "ledger_token_columns_identical"],
+        "metrics": [("prefill_tokens_on", "lower"),
+                    ("prefill_saved_fraction", "higher"),
+                    ("prefix_hits", "higher")],
+        "wall": [("wall_on_s", "wall_off_s")],
+    },
+    "multi_query": {
+        "invariants": ["rows_identical_to_serial_session"],
+        "metrics": [("prefill_tokens_shared", "lower"),
+                    ("engine_runs_shared", "lower"),
+                    ("q2_sampling_tokens_shared", "lower"),
+                    ("total_tokens_shared", "lower")],
+        "wall": [("wall_shared_s", "wall_serial_s")],
+    },
+    "paged_kv": {
+        "invariants": ["rows_identical", "ledger_token_columns_identical"],
+        "metrics": [("prefill_tokens_paged", "lower"),
+                    ("prefill_invocations_paged", "lower"),
+                    ("prefill_ctx_ratio", "lower"),
+                    ("kv_bytes_ratio", "lower")],
+        "wall": [("wall_paged_s", "wall_slab_s")],
+    },
+}
+
+
+def _load(path: Path):
+    if not path.exists():
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _check_metric(name, fresh_v, base_v, direction, tol):
+    """Returns (ok, detail). Worse-than-baseline beyond tol fails; better
+    never fails (improvements shift the baseline only when re-committed)."""
+    if base_v in (None, 0):
+        return True, f"{name}: baseline {base_v!r}, skipped"
+    if direction == "lower":
+        worse = (fresh_v - base_v) / abs(base_v)
+    else:
+        worse = (base_v - fresh_v) / abs(base_v)
+    ok = worse <= tol
+    arrow = {"lower": "<=", "higher": ">="}[direction]
+    return ok, (f"{name}: fresh {fresh_v} vs baseline {base_v} "
+                f"(want {arrow} within {tol:.0%}; "
+                f"{'regressed' if not ok else 'ok'} {worse:+.1%})")
+
+
+def compare_bench(bench: str, tol: float, wall_tol: float) -> bool:
+    spec = SPECS[bench]
+    base = _load(BASELINES / f"BENCH_{bench}.json")
+    fresh = _load(FRESH / f"BENCH_{bench}.json")
+    if base is None:
+        print(f"[{bench}] FAIL: no committed baseline "
+              f"({BASELINES / f'BENCH_{bench}.json'})")
+        return False
+    if fresh is None:
+        print(f"[{bench}] FAIL: no fresh result "
+              f"({FRESH / f'BENCH_{bench}.json'}) — did the bench run?")
+        return False
+    if bool(base.get("smoke")) != bool(fresh.get("smoke")):
+        print(f"[{bench}] FAIL: smoke/full mismatch "
+              f"(baseline smoke={base.get('smoke')}, fresh={fresh.get('smoke')})")
+        return False
+
+    ok = True
+    for key in spec["invariants"]:
+        if not fresh.get(key):
+            print(f"[{bench}] FAIL invariant {key} = {fresh.get(key)!r}")
+            ok = False
+    for key, direction in spec["metrics"]:
+        good, detail = _check_metric(key, fresh.get(key), base.get(key),
+                                     direction, tol)
+        print(f"[{bench}] {'ok  ' if good else 'FAIL'} {detail}")
+        ok = ok and good
+    for num, den in spec["wall"]:
+        fb, bb = fresh.get(den) or 0, base.get(den) or 0
+        if not fb or not bb:
+            print(f"[{bench}] ok   wall {num}/{den}: denominator missing, skipped")
+            continue
+        fresh_ratio = round((fresh.get(num) or 0) / fb, 4)
+        base_ratio = round((base.get(num) or 0) / bb, 4)
+        good, detail = _check_metric(f"wall {num}/{den}", fresh_ratio,
+                                     base_ratio, "lower", wall_tol)
+        print(f"[{bench}] {'ok  ' if good else 'FAIL'} {detail}")
+        ok = ok and good
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", choices=sorted(SPECS),
+                    help="single bench to compare (default: all with baselines)")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed relative regression on counter metrics")
+    ap.add_argument("--wall-tol", type=float, default=0.10,
+                    help="allowed relative regression on wall-clock ratios")
+    args = ap.parse_args(argv)
+
+    benches = [args.bench] if args.bench else sorted(SPECS)
+    results = {b: compare_bench(b, args.tol, args.wall_tol) for b in benches}
+    bad = [b for b, good in results.items() if not good]
+    if bad:
+        print(f"\nREGRESSION: {', '.join(bad)}")
+        return 1
+    print(f"\nall green: {', '.join(benches)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

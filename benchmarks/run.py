@@ -17,13 +17,14 @@ def main() -> None:
                     default=bool(os.environ.get("REPRO_BENCH_QUICK")))
     ap.add_argument("--only", default=None,
                     help="baselines|filter_groups|ordering|join|ablations|"
-                         "kernels|roofline|batching|prefix_cache|multi_query")
+                         "kernels|roofline|batching|prefix_cache|multi_query|"
+                         "paged_kv")
     args = ap.parse_args()
 
     from . import (bench_ablations, bench_baselines, bench_batching,
                    bench_filter_groups, bench_join, bench_kernels,
-                   bench_multi_query, bench_ordering, bench_prefix_cache,
-                   bench_roofline)
+                   bench_multi_query, bench_ordering, bench_paged_kv,
+                   bench_prefix_cache, bench_roofline)
     from .common import BenchContext
 
     ctx = BenchContext()
@@ -32,6 +33,7 @@ def main() -> None:
         "batching": lambda: bench_batching.run(quick=args.quick),
         "prefix_cache": lambda: bench_prefix_cache.run(quick=args.quick),
         "multi_query": lambda: bench_multi_query.run(quick=args.quick),
+        "paged_kv": lambda: bench_paged_kv.run(quick=args.quick),
         "ordering": lambda: bench_ordering.run(ctx, quick=args.quick),
         "join": lambda: bench_join.run(ctx, quick=args.quick),
         "filter_groups": lambda: bench_filter_groups.run(ctx, quick=args.quick),

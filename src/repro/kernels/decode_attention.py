@@ -53,6 +53,113 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                           ).astype(o_ref.dtype)
 
 
+# ------------------------------------------------------------ paged --------
+#
+# Paged flash-decoding: the KV cache is a pool of fixed-size pages shared by
+# every sequence (serving/engine.py kv_layout="paged"); each row owns a page
+# *table* mapping its block index to a physical page. The table rides in as
+# a scalar-prefetch operand, so the KV BlockSpec index_map dereferences it —
+# the kernel walks pages in logical order without ever materializing a
+# gathered copy of the cache (the host-side reference path, `cache_ops.
+# gather_page_views`, pays that copy; this kernel is why TPUs don't).
+
+
+def _paged_kernel(len_ref, ptab_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
+                  l_scr, acc_scr, *, ps: int, nk: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    q = q_ref[0, 0, :].astype(jnp.float32)                  # (D,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (ps, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.sum(k * q[None, :], axis=1) * (q.shape[0] ** -0.5)   # (ps,)
+    pos = j * ps + jax.lax.iota(jnp.int32, ps)              # logical positions
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_scr[0, 0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[0, 0] = l_scr[0, 0] * alpha + p.sum()
+    acc_scr[0, :] = acc_scr[0, :] * alpha + jnp.sum(p[:, None] * v, axis=0)
+    m_scr[0, 0] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :] = (acc_scr[0, :] / jnp.maximum(l_scr[0, 0], 1e-30)
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q, k_pool, v_pool, page_table, lengths, *,
+                                  interpret=False):
+    """Flash-decoding through a page table.
+
+    q: (B, H, D); pools: (P, ps, Hkv, D) — the *shared* page pool, no batch
+    axis; page_table: (B, nb) int32 physical page per logical block;
+    lengths: (B,) valid tokens per row. -> (B, H, D).
+    """
+    B, H, D = q.shape
+    P, ps, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    nb = page_table.shape[1]
+
+    grid = (B, H, nb)
+    kernel = functools.partial(_paged_kernel, ps=ps, nk=nb)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, D), lambda b, h, j, lens, ptab: (b, h, 0)),
+                pl.BlockSpec((1, ps, 1, D),
+                             lambda b, h, j, lens, ptab: (ptab[b, j], 0, h // G, 0)),
+                pl.BlockSpec((1, ps, 1, D),
+                             lambda b, h, j, lens, ptab: (ptab[b, j], 0, h // G, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j, lens, ptab: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(page_table, jnp.int32),
+      q, k_pool, v_pool)
+    return out
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, lengths):
+    """jnp oracle: gather pages into dense rows, then masked attention."""
+    B, H, D = q.shape
+    _, ps, Hkv, _ = k_pool.shape
+    kg = k_pool[page_table]                     # (B, nb, ps, Hkv, D)
+    vg = v_pool[page_table]
+    S = kg.shape[1] * ps
+    kg = kg.reshape(B, S, Hkv, D)
+    vg = vg.reshape(B, S, Hkv, D)
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kg,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    ok = jnp.arange(S)[None, :] < jnp.asarray(lengths)[:, None]
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p.astype(vg.dtype), vg).reshape(B, H, D)
+
+
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
 def decode_attention_pallas(q, k_cache, v_cache, length, *, bk=512,
                             interpret=False):

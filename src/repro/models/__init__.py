@@ -1,6 +1,6 @@
 from .config import ModelConfig
-from .model import (decode_step, forward, init_decode_cache, init_params,
-                    param_count, prefill)
+from .model import (decode_step, encode_cross_kv, forward, init_decode_cache,
+                    init_params, param_count, prefill, prefill_chunk)
 
-__all__ = ["ModelConfig", "init_params", "forward", "prefill", "decode_step",
-           "init_decode_cache", "param_count"]
+__all__ = ["ModelConfig", "init_params", "forward", "prefill", "prefill_chunk",
+           "decode_step", "encode_cross_kv", "init_decode_cache", "param_count"]

@@ -331,6 +331,57 @@ def cache_write(cache, new, pos):
     return cache.at[jnp.arange(B), pos].set(new[:, 0].astype(cache.dtype))
 
 
+def cache_write_chunk(cache, new, start):
+    """Write a C-token chunk's K/V at positions [start, start+C). `start` is a
+    scalar (chunked prefill is per-sequence, B=1 in the serving engine, but
+    any B works as long as all rows share the start)."""
+    return lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype),
+        (0, jnp.asarray(start, jnp.int32)) + (0,) * (cache.ndim - 2))
+
+
+def attn_chunk_apply(cfg: ModelConfig, p, x, *, start, k_cache, v_cache,
+                     lora=None, cross=False):
+    """Chunked-prefill attention: C query tokens at positions
+    [start, start+C) attend the cache up to their own position (causal
+    within the chunk, full over the already-filled prefix). Generalizes
+    `attn_decode_apply` from C=1; `start` may be traced, so one jit
+    signature serves every chunk offset.
+
+    x: (B, C, d). Caches (B, Smax, Hkv, hd). Returns (out, (k_cache, v_cache))
+    with the chunk's K/V written into the caches (cross: caches untouched).
+    """
+    B, C, _ = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q_pos = jnp.asarray(start, jnp.int32) + jnp.arange(C)
+    if cross:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+        if cfg.attn_bias:
+            q = q + p["bq"]
+    else:
+        q, k, v = _project_qkv(cfg, p, x, lora)
+        if cfg.use_rope:
+            pp = jnp.broadcast_to(q_pos[None, :], (B, C))
+            q = apply_rope(q, pp, cfg.rope_theta)
+            k = apply_rope(k, pp, cfg.rope_theta)
+        k_cache = cache_write_chunk(k_cache, k, start)
+        v_cache = cache_write_chunk(v_cache, v, start)
+    qg = q.reshape(B, C, nkv, nq // nkv, hd)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    kv_pos = jnp.arange(k_cache.shape[1])
+    ok = (kv_pos[None, :] <= q_pos[:, None]) if not cross else \
+        jnp.ones((C, k_cache.shape[1]), bool)
+    s = jnp.where(ok[None, None, None, :, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", pr.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, C, nq, hd)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    if lora is not None:
+        out = out + (out @ lora["a_o"]) @ lora["b_o"]
+    return out, (k_cache, v_cache) if not cross else (None, None)
+
+
 def attn_decode_apply(cfg: ModelConfig, p, x, *, pos, k_cache, v_cache, lora=None,
                       cross=False, cache_len=None, attn_impl=None):
     """Single-token decode. x: (B, 1, d). Caches (B, Smax, Hkv, hd).
@@ -443,6 +494,31 @@ def mla_decode_apply(cfg: ModelConfig, p, x, *, pos, ckv_cache, krope_cache):
     else:
         ok = jnp.arange(ckv_cache.shape[1])[None, :] <= posv[:, None]
     s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", pr.astype(ckv_cache.dtype), ckv_cache)
+    out = jnp.einsum("bshr,rhe->bshe", ctx, p["w_uv"])
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return out, (ckv_cache, krope_cache)
+
+
+def mla_chunk_apply(cfg: ModelConfig, p, x, *, start, ckv_cache, krope_cache):
+    """Chunked-prefill MLA (absorbed form, same math as `mla_decode_apply`
+    with C query tokens): the chunk's compressed KV is written at
+    [start, start+C) and queries attend the cache up to their own position."""
+    B, C, _ = x.shape
+    q_pos = jnp.asarray(start, jnp.int32) + jnp.arange(C)
+    pp = jnp.broadcast_to(q_pos[None, :], (B, C))
+    q_nope, q_rope, c_kv, k_rope = mla_project(cfg, p, x, pp)
+    ckv_cache = cache_write_chunk(ckv_cache, c_kv, start)
+    krope_cache = cache_write_chunk(krope_cache, k_rope, start)
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])
+    s = jnp.einsum("bshr,btr->bhst", q_abs, ckv_cache,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bshe,bte->bhst", q_rope, krope_cache,
+                       preferred_element_type=jnp.float32)
+    s = s * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    ok = jnp.arange(ckv_cache.shape[1])[None, :] <= q_pos[:, None]    # (C, S)
+    s = jnp.where(ok[None, None, :, :], s, -jnp.inf)
     pr = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhst,btr->bshr", pr.astype(ckv_cache.dtype), ckv_cache)
     out = jnp.einsum("bshr,rhe->bshe", ctx, p["w_uv"])

@@ -438,15 +438,210 @@ def decode_step(cfg: ModelConfig, params, token, cache, *, constrain=None,
     return logits, new_cache
 
 
+# ------------------------------------------------------- chunked prefill ---
+
+
+def prefill_chunk(cfg: ModelConfig, params, batch, cache, length=None, *,
+                  constrain=None, unroll=False):
+    """Advance a decode cache through a C-token prompt chunk.
+
+    The chunk's tokens sit at positions [pos, pos+C) where `pos = cache["pos"]`
+    (a scalar — chunked prefill is per-sequence); attention K/V is written at
+    those positions and queries attend everything up to their own position,
+    so feeding a prompt through successive chunks is exact for every family
+    (SSM/conv state advances through the same recurrence decode uses, with
+    the carried conv window prepended). `pos` may be traced: one jit
+    signature per chunk *length* serves every offset.
+
+    `length` (optional, traced): true token count when the chunk is
+    right-padded to a fixed shape — with it, every chunk of a prompt reuses
+    one jit signature. Padded positions write garbage K/V past the true end,
+    which is harmless: later chunks/decode overwrite those positions before
+    any query is allowed to attend them (position-gated masks), logits are
+    taken at the last real position, and SSM/conv state is frozen past
+    `length` (dt=0, conv tail sliced at the real boundary).
+
+    batch: {"tokens": (B, C)}; vlm may add "image_embeds" on the first chunk
+    (image tokens are prepended, count toward the cache position, and are
+    always real — `length` counts text tokens only); encdec requires
+    cache["ck"]/["cv"] already populated (see `encode_cross_kv`).
+    Returns (last-position logits (B, 1, V), new cache).
+    """
+    constrain = constrain or _id_constrain
+    p = _cast(params, cfg.dtype)
+    pos = cache["pos"]
+    tokens = batch["tokens"]
+    x = jnp.take(p["embed"], tokens, axis=0)
+    n_img = 0
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(cfg.dtype)
+        img = jax.nn.gelu(img @ p["mm_proj"]["w1"]) @ p["mm_proj"]["w2"]
+        x = jnp.concatenate([img, x], axis=1)
+        n_img = img.shape[1]
+    C = x.shape[1]
+    x = constrain(x, "hidden")
+    start = pos
+    fam = cfg.family
+    new_cache = dict(cache)
+    scan = lambda f, init, xs: lax.scan(f, init, xs, unroll=unroll)
+
+    def attn_block(lp, h, kc, vc, lora=None, cross_kv=None):
+        hh = L.norm_apply(cfg, lp["attn_norm"], h)
+        a, (kc, vc) = L.attn_chunk_apply(cfg, lp["attn"], hh, start=start,
+                                         k_cache=kc, v_cache=vc, lora=lora)
+        h = h + a
+        if cross_kv is not None:
+            hh = L.norm_apply(cfg, lp["cross_norm"], h)
+            a, _ = L.attn_chunk_apply(cfg, lp["cross_attn"], hh, start=start,
+                                      k_cache=cross_kv[0], v_cache=cross_kv[1],
+                                      cross=True)
+            h = h + a
+        hh = L.norm_apply(cfg, lp["mlp_norm"], h)
+        if "moe" in lp:
+            h = h + L.moe_apply(cfg, lp["moe"], hh, constrain=constrain)
+        else:
+            h = h + L.mlp_apply(cfg, lp["mlp"], hh)
+        return h, kc, vc
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.use_mla:
+            def body(h, xs):
+                lp, ckv, kr = xs
+                hh = L.norm_apply(cfg, lp["attn_norm"], h)
+                a, (ckv, kr) = L.mla_chunk_apply(cfg, lp["attn"], hh,
+                                                 start=start, ckv_cache=ckv,
+                                                 krope_cache=kr)
+                h = h + a
+                hh = L.norm_apply(cfg, lp["mlp_norm"], h)
+                if "moe" in lp:
+                    h = h + L.moe_apply(cfg, lp["moe"], hh)
+                else:
+                    h = h + L.mlp_apply(cfg, lp["mlp"], hh)
+                return h, (ckv, kr)
+            nd = cfg.first_dense_layers
+            if fam == "moe" and nd:
+                x, (ckv_d, kr_d) = scan(
+                    body, x, (p["dense_layers"], cache["ckv"][:nd], cache["krope"][:nd]))
+                x, (ckv_m, kr_m) = scan(
+                    body, x, (p["layers"], cache["ckv"][nd:], cache["krope"][nd:]))
+                new_cache["ckv"] = jnp.concatenate([ckv_d, ckv_m], axis=0)
+                new_cache["krope"] = jnp.concatenate([kr_d, kr_m], axis=0)
+            else:
+                x, (ckv, kr) = scan(body, x, (p["layers"], cache["ckv"], cache["krope"]))
+                new_cache["ckv"], new_cache["krope"] = ckv, kr
+        else:
+            def body(h, xs):
+                lp, kc, vc = xs
+                h, kc, vc = attn_block(lp, h, kc, vc)
+                return h, (kc, vc)
+            nd = cfg.first_dense_layers if fam == "moe" else 0
+            if nd:
+                x, (k_d, v_d) = scan(body, x, (p["dense_layers"], cache["k"][:nd], cache["v"][:nd]))
+                x, (k_m, v_m) = scan(body, x, (p["layers"], cache["k"][nd:], cache["v"][nd:]))
+                new_cache["k"] = jnp.concatenate([k_d, k_m], axis=0)
+                new_cache["v"] = jnp.concatenate([v_d, v_m], axis=0)
+            else:
+                x, (k, v) = scan(body, x, (p["layers"], cache["k"], cache["v"]))
+                new_cache["k"], new_cache["v"] = k, v
+    elif fam == "ssm":
+        def body(h, xs):
+            lp, conv, st = xs
+            hh = L.norm_apply(cfg, lp["norm"], h)
+            y, conv, st = S.mamba1_chunk(cfg, lp["mamba"], hh,
+                                         conv_state=conv, ssm_state=st,
+                                         length=length)
+            return h + y, (conv, st)
+        x, (conv, st) = scan(body, x, (p["layers"], cache["conv"], cache["ssm"]))
+        new_cache["conv"], new_cache["ssm"] = conv.astype(cache["conv"].dtype), st
+    elif fam == "hybrid":
+        n_app = cfg.num_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_app, cfg.attn_every) + a.shape[1:]), p["layers"])
+        conv_r = cache["conv"].reshape((n_app, cfg.attn_every) + cache["conv"].shape[1:])
+        ssm_r = cache["ssm"].reshape((n_app, cfg.attn_every) + cache["ssm"].shape[1:])
+
+        def super_body(h, xs):
+            i, mstack, lora_i, kc, vc, conv_i, ssm_i = xs
+            shared = jax.tree.map(lambda a: a[i % cfg.n_shared_attn_blocks], p["shared_blocks"])
+            h, kc, vc = attn_block(shared, h, kc, vc, lora=lora_i)
+
+            def mamba_body(hh, ys):
+                lp, conv, st = ys
+                hn = L.norm_apply(cfg, lp["norm"], hh)
+                y, conv, st = S.mamba2_chunk(cfg, lp["mamba"], hn,
+                                             conv_state=conv, ssm_state=st,
+                                             length=length)
+                return hh + y, (conv, st)
+            h, (conv_i, ssm_i) = scan(mamba_body, h, (mstack, conv_i, ssm_i))
+            return h, (kc, vc, conv_i, ssm_i)
+
+        x, (k, v, conv, st) = scan(
+            super_body, x,
+            (jnp.arange(n_app), stacked, p["lora"], cache["k"], cache["v"], conv_r, ssm_r))
+        new_cache["k"], new_cache["v"] = k, v
+        new_cache["conv"] = conv.reshape(cache["conv"].shape).astype(cache["conv"].dtype)
+        new_cache["ssm"] = st.reshape(cache["ssm"].shape)
+    elif fam == "encdec":
+        # clipped take, not dynamic_slice: a padded chunk near the position
+        # limit must never shift the real tokens' embeddings
+        posv = jnp.clip(start + jnp.arange(C), 0, p["dec_pos"].shape[0] - 1)
+        x = x + jnp.take(p["dec_pos"], posv, axis=0)[None]
+
+        def body(h, xs):
+            lp, kc, vc, ck, cv = xs
+            h, kc, vc = attn_block(lp, h, kc, vc, cross_kv=(ck, cv))
+            return h, (kc, vc)
+        x, (k, v) = scan(body, x, (p["dec_layers"], cache["k"], cache["v"],
+                                   cache["ck"], cache["cv"]))
+        new_cache["k"], new_cache["v"] = k, v
+
+    if length is None:
+        x_last, adv = x[:, -1:], C
+    else:
+        x_last = lax.dynamic_slice_in_dim(x, n_img + length - 1, 1, axis=1)
+        adv = n_img + length
+    x = L.norm_apply(cfg, p["final_norm"], x_last)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = constrain(x @ head, "logits")
+    new_cache["pos"] = pos + adv
+    return logits, new_cache
+
+
+def encode_cross_kv(cfg: ModelConfig, params, frames, *, constrain=None,
+                    unroll=False):
+    """Run the encoder once and project per-decoder-layer cross K/V —
+    the encdec prerequisite for `prefill_chunk` (full `prefill` computes
+    these inside the decoder blocks). Returns (ck, cv), each
+    (num_layers, B, encoder_seq, n_kv_heads, head_dim)."""
+    constrain = constrain or _id_constrain
+    p = _cast(params, cfg.dtype)
+    enc_out = _encoder(cfg, p, frames.astype(cfg.dtype), constrain,
+                       remat=False, unroll=unroll)
+
+    def body(_, lp):
+        ck = jnp.einsum("bsd,dhe->bshe", enc_out, lp["cross_attn"]["wk"])
+        cv = jnp.einsum("bsd,dhe->bshe", enc_out, lp["cross_attn"]["wv"])
+        return None, (ck, cv)
+    _, (ck, cv) = lax.scan(body, None, p["dec_layers"], unroll=unroll)
+    return ck, cv
+
+
 # ------------------------------------------------------------- prefill -----
 
 
-def prefill(cfg: ModelConfig, params, batch, max_len: int, *, constrain=None,
-            remat=False, unroll=False):
+def prefill(cfg: ModelConfig, params, batch, max_len: int, length=None, *,
+            constrain=None, remat=False, unroll=False):
     """Process the prompt, fill the cache, return last-position logits.
 
     Implemented as forward + KV collection for attention archs; for SSM archs
     the scan's final state is the cache.
+
+    `length` (optional, traced): true token count when `batch["tokens"]` is
+    right-padded to a bucketed shape — one jit signature then serves every
+    prompt length in the bucket. Exactness is preserved: logits are taken at
+    the last *real* position, `cache["pos"]` gates attention so padded K/V
+    is never attended, and SSM/conv state is frozen past `length` (padded
+    positions get dt=0, the conv tail is sliced at the real boundary).
     """
     constrain = constrain or _id_constrain
     p = _cast(params, cfg.dtype)
@@ -505,9 +700,20 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *, constrain=None,
             x_in, z = S._mamba1_ssm_inputs(cfg, lp["mamba"], hh)
             xc = jax.nn.silu(S.causal_depthwise_conv(x_in, lp["mamba"]["conv_w"], lp["mamba"]["conv_b"]))
             dt, A, B_m, C_m = S._mamba1_scan_params(cfg, lp["mamba"], xc)
+            if length is not None:
+                # dt=0 on padded positions: decay 1, contribution 0 — the
+                # recurrent state is exactly the state at `length`.
+                dt = dt * (jnp.arange(S_in)[None, :, None] < length)
             y, hfin = S.mamba1_scan_ref(xc, dt, A, B_m, C_m, lp["mamba"]["D"])
             out = (y * jax.nn.silu(z)) @ lp["mamba"]["out_proj"]
-            conv_tail = x_in[:, -(cfg.ssm_conv - 1):, :]
+            # zero left-pad so a prompt shorter than the conv window gets
+            # real zero history, not a short/misaligned window
+            hist = jnp.pad(x_in, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+            if length is None:
+                conv_tail = hist[:, S_in:, :]
+            else:
+                conv_tail = lax.dynamic_slice_in_dim(
+                    hist, length, cfg.ssm_conv - 1, axis=1)
             return h + out, (conv_tail, hfin)
         x, (conv, st) = lax.scan(body, x, p["layers"], unroll=unroll)
         cache["conv"] = conv.astype(cache["conv"].dtype)
@@ -530,6 +736,8 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *, constrain=None,
                 di, N = cfg.d_inner, cfg.ssm_state
                 x_i, B_m, C_m = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
                 dt = jax.nn.softplus(dt_raw + lp["mamba"]["dt_bias"])
+                if length is not None:
+                    dt = dt * (jnp.arange(S_in)[None, :, None] < length)
                 A = -jnp.exp(lp["mamba"]["A_log"].astype(jnp.float32))
                 Bsz, S_len = x_i.shape[0], x_i.shape[1]
                 y, hfin = S.mamba2_ssd_ref(
@@ -537,7 +745,14 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *, constrain=None,
                     dt, A, B_m, C_m, lp["mamba"]["D"], chunk=cfg.ssm_chunk)
                 y = y.reshape(Bsz, S_len, di)
                 y = L.rms_norm(y * jax.nn.silu(zz), lp["mamba"]["norm_w"], cfg.norm_eps)
-                conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :]  # raw pre-conv inputs
+                # raw pre-conv inputs, zero-padded history (see ssm branch)
+                hist = jnp.pad(xbc_raw,
+                               ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+                if length is None:
+                    conv_tail = hist[:, S_in:, :]
+                else:
+                    conv_tail = lax.dynamic_slice_in_dim(
+                        hist, length, cfg.ssm_conv - 1, axis=1)
                 return hh + y @ lp["mamba"]["out_proj"], (conv_tail, hfin)
 
             h, (conv_i, ssm_i) = lax.scan(mamba_body, h, mstack, unroll=unroll)
@@ -563,8 +778,13 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *, constrain=None,
         cache["ck"] = ckvs[0].astype(cache["ck"].dtype)
         cache["cv"] = ckvs[1].astype(cache["cv"].dtype)
 
-    x = L.norm_apply(cfg, p["final_norm"], x[:, -1:])
+    if length is None:
+        x_last, true_len = x[:, -1:], S_in
+    else:
+        x_last = lax.dynamic_slice_in_dim(x, n_img + length - 1, 1, axis=1)
+        true_len = n_img + length
+    x = L.norm_apply(cfg, p["final_norm"], x_last)
     head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
     logits = constrain(x @ head, "logits")
-    cache["pos"] = jnp.asarray(S_in, jnp.int32)
+    cache["pos"] = jnp.asarray(true_len, jnp.int32)
     return logits, cache

@@ -125,6 +125,35 @@ def mamba1_decode(cfg: ModelConfig, p, x_t, *, conv_state, ssm_state):
     return out, conv_state, ssm_state
 
 
+def mamba1_chunk(cfg: ModelConfig, p, x, *, conv_state, ssm_state,
+                 length=None):
+    """Advance conv+ssm state through a C-token chunk (chunked prefill).
+
+    x: (B, C, d); conv_state: (B, K-1, di) raw pre-conv inputs; ssm_state:
+    (B, di, N) fp32. Exactly the decode recurrence batched over C — the
+    carried conv window is prepended so the causal conv sees the true
+    history instead of zero padding. `length` (traced): true token count of
+    a right-padded chunk — dt=0 past it freezes the scan state, and the
+    conv tail is sliced at the real boundary. Returns
+    (out, conv_state, ssm_state).
+    """
+    K = p["conv_w"].shape[0]
+    x_in, z = _mamba1_ssm_inputs(cfg, p, x)
+    x_cat = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+    xc = jax.nn.silu(
+        causal_depthwise_conv(x_cat, p["conv_w"], p["conv_b"])[:, K - 1:])
+    dt, A, B_mat, C_mat = _mamba1_scan_params(cfg, p, xc)
+    if length is not None:
+        dt = dt * (jnp.arange(x.shape[1])[None, :, None] < length)
+    y, h = mamba1_scan_ref(xc, dt, A, B_mat, C_mat, p["D"], h0=ssm_state)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    if length is None:
+        tail = x_cat[:, -(K - 1):]
+    else:
+        tail = lax.dynamic_slice_in_dim(x_cat, length, K - 1, axis=1)
+    return out, tail, h
+
+
 # ------------------------------------------------------------- mamba 2 -----
 
 
@@ -222,6 +251,34 @@ def mamba2_apply(cfg: ModelConfig, p, x, *, ssd_kernel=None):
     y = y.reshape(B, S, di)
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
     return y @ p["out_proj"]
+
+
+def mamba2_chunk(cfg: ModelConfig, p, x, *, conv_state, ssm_state,
+                 length=None):
+    """Chunked-prefill step for Mamba2 (see `mamba1_chunk`). x: (B, C, d);
+    conv_state: (B, K-1, di+2N) raw pre-conv inputs; ssm_state: (B,h,p,N)
+    fp32. Returns (out, conv_state, ssm_state)."""
+    B, C, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.mamba_headdim
+    K = p["conv_w"].shape[0]
+    z, xbc_raw, dt_raw = _mamba2_proj(cfg, p, x)
+    x_cat = jnp.concatenate([conv_state.astype(xbc_raw.dtype), xbc_raw], axis=1)
+    xc = jax.nn.silu(
+        causal_depthwise_conv(x_cat, p["conv_w"], p["conv_b"])[:, K - 1:])
+    x_in, B_mat, C_mat = xc[..., :di], xc[..., di:di + N], xc[..., di + N:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    if length is not None:
+        dt = dt * (jnp.arange(C)[None, :, None] < length)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = mamba2_ssd_ref(x_in.reshape(B, C, H, P), dt, A, B_mat, C_mat,
+                          p["D"], chunk=cfg.ssm_chunk, h0=ssm_state)
+    y = y.reshape(B, C, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    if length is None:
+        tail = x_cat[:, -(K - 1):]
+    else:
+        tail = lax.dynamic_slice_in_dim(x_cat, length, K - 1, axis=1)
+    return y @ p["out_proj"], tail, h
 
 
 def mamba2_decode(cfg: ModelConfig, p, x_t, *, conv_state, ssm_state):

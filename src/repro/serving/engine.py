@@ -1,23 +1,31 @@
 """Batched serving engine with continuous batching (slot-based).
 
-Requests prefill individually (exact length — correct for SSM state too),
-land in a slot of the batched decode cache, and decode advances all live
-slots each step with per-row cache positions (see layers.cache_write).
-Finished rows free their slot immediately for queued requests — the
-"extraction operator fleet" behaviour QUEST's per-document plans produce
-(heterogeneous short extraction calls).
+Two KV layouts (DESIGN.md §10/§12):
 
-Shared-prefix KV reuse (DESIGN.md §10): with `prefix_cache` enabled, a
-request that declares a shareable prompt boundary (`Request.shared_len`)
-prefills in two phases — the shared prefix through the standard prefill
-(snapshotted into the cache the first time), then the per-request suffix
-token-by-token through the decode step, which is exact for every family
-(attention KV is position-indexed; SSM/conv state advances through the
-same recurrence decode uses). A later request whose prompt extends a
-cached prefix copies the snapshot into its slot and prefills only the
-unshared suffix. Saved prefill tokens are reported separately
-(`stats["prefix_saved_tokens"]`); decoded outputs are identical with the
-cache on or off (tests/test_prefix_cache.py).
+`kv_layout="paged"` (default) — vLLM-style block layout. Length-indexed KV
+lives in a fixed pool of `page_size`-token pages (`models.cache_ops.
+PageAllocator`); each slot is a page table, and the decode/prefill model
+code runs over views gathered through it. Prompts prefill in fixed-size
+chunks (`chunk_size` tokens per jitted `prefill_chunk` call, remainder
+chunk exact — jit signatures stay bounded) instead of token-at-a-time
+decode steps. A request whose prompt extends a cached prefix splices the
+prefix's page ids into its table — O(1) in KV bytes, ref-counted, with
+copy-on-write on the partially-filled boundary page — and chunk-prefills
+only the unshared suffix. Pure-state buffers (SSM conv/ssm state, enc-dec
+cross KV) are not length-indexed: they stay in the per-slot state cache and
+prefix entries carry the exact boundary state, so paging is correct for all
+six model families, not just attention.
+
+`kv_layout="slab"` — the PR 2 layout kept for comparison: per-slot
+contiguous KV, prefix hits copy a materialized snapshot into the slot
+(`expand_snapshot`/`write_slot`) and the unshared suffix prefills one token
+at a time through the decode step. Full prefills bucket their jit
+signatures: prompts are right-padded to the next `chunk_size` multiple and
+`prefill(..., length=n)` keeps the state exact at the true length.
+
+Shared-prefix semantics are layout-invariant: decoded outputs are identical
+with the cache on or off and across layouts (tests/test_paged_kv.py);
+savings are reported separately (`stats["prefix_saved_tokens"]`).
 
 Fault tolerance: `drain_slot` evicts a request (e.g. on a simulated worker
 failure) and requeues it; the scheduler resubmits from the prompt. Retries
@@ -39,8 +47,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_decode_cache, prefill
-from repro.models.cache_ops import expand_snapshot, prefix_snapshot, write_slot
+from repro.models import (decode_step, encode_cross_kv, init_decode_cache,
+                          prefill, prefill_chunk)
+from repro.models.cache_ops import (PAGE_SINK, PageAllocator,
+                                    PagePoolExhausted, cache_nbytes,
+                                    expand_snapshot, gather_page_views,
+                                    prefix_snapshot, scatter_chunk_pages,
+                                    scatter_token_pages, write_slot)
 from repro.models.config import ModelConfig
 from repro.data import lm_data
 from .prefix_cache import PrefixCache
@@ -70,18 +83,33 @@ class RunTruncated(RuntimeError):
         self.finished = finished
 
 
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  queue_depth: Optional[int] = None,
                  prefix_cache: Union[bool, PrefixCache, None] = False,
-                 prefix_min_len: int = 8):
+                 prefix_min_len: int = 8,
+                 kv_layout: str = "paged", page_size: int = 16,
+                 num_pages: Optional[int] = None, chunk_size: int = 32):
         """queue_depth: optional admission-control bound on queued requests;
         ServedExtractor splits its batch rounds into windows of this size
         (None = unbounded).
         prefix_cache: shared-prefix KV reuse — False/None off, True for a
         default `PrefixCache()`, or a configured instance.
-        prefix_min_len: shortest prefix worth snapshotting/copying."""
+        prefix_min_len: shortest prefix worth snapshotting/splicing.
+        kv_layout: "paged" (block/page-table KV + chunked prefill) or
+        "slab" (per-slot contiguous KV, PR 2's layout).
+        page_size: tokens per KV page (paged layout; must divide max_len).
+        num_pages: pool capacity (default (slots+4) tables' worth + sink).
+        chunk_size: prompt tokens per chunked-prefill call; also the
+        bucket granularity for slab-mode prefill jit signatures."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -93,6 +121,14 @@ class ServingEngine:
         else:
             self.prefix_cache = PrefixCache() if prefix_cache else None
         self.prefix_min_len = max(1, int(prefix_min_len))
+        if kv_layout not in ("paged", "slab"):
+            raise ValueError(f"kv_layout must be 'paged' or 'slab', got {kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        self.page_size = max(1, int(page_size))
+        self.chunk_size = max(1, int(chunk_size))
+        # vlm: image tokens occupy the first cache positions of every prompt
+        self._extra = cfg.n_image_tokens if cfg.family == "vlm" else 0
         self.queue: deque = deque()
         self.active: dict = {}          # slot -> Request
         self.finished: dict = {}
@@ -100,7 +136,10 @@ class ServingEngine:
         self.stats = {"prefill_tokens": 0, "decode_steps": 0, "evictions": 0,
                       "runs": 0, "max_live": 0, "decode_slot_steps": 0,
                       "prefix_hits": 0, "prefix_saved_tokens": 0,
-                      "prefix_inserts": 0, "truncations": 0, "failures": 0}
+                      "prefix_inserts": 0, "truncations": 0, "failures": 0,
+                      "prefill_invocations": 0, "prefill_chunks": 0,
+                      "cow_copies": 0, "kv_bytes_peak": 0,
+                      "prefill_ctx_positions": 0}
 
         self.cache = init_decode_cache(cfg, slots, max_len)
         self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
@@ -109,6 +148,21 @@ class ServingEngine:
 
         self._decode = jax.jit(partial(decode_step, cfg))
         self._prefill_cache = {}
+
+        if self.paged:
+            assert max_len % self.page_size == 0, (
+                f"max_len={max_len} must be a multiple of page_size={page_size}")
+            self.pages_per_slot = max_len // self.page_size
+            if num_pages is None:
+                num_pages = (slots + 4) * self.pages_per_slot + 1
+            self.alloc = PageAllocator(cfg, num_pages, self.page_size)
+            for k in self.alloc.pools:   # length-indexed KV lives in the pool
+                del self.cache[k]
+            self.slot_pages: list = [[] for _ in range(slots)]
+            self._pos_h = np.zeros((slots,), np.int64)   # host mirror of pos
+            self._chunk_fns: dict = {}
+            self._paged_decode = jax.jit(self._make_paged_decode())
+            self._cross_kv = None                         # encdec, computed once
 
     # ------------------------------------------------------------ intake --
 
@@ -131,18 +185,30 @@ class ServingEngine:
             req.submitted_s = time.time()
             self.queue.append(req)
 
-    def _prefill_fn(self, length: int):
-        if length not in self._prefill_cache:
-            self._prefill_cache[length] = jax.jit(
-                partial(prefill, self.cfg, max_len=self.max_len))
-        return self._prefill_cache[length]
+    # --------------------------------------------------- slab-mode prefill --
 
-    # ----------------------------------------------------------- prefill --
+    def _bucket_len(self, n: int) -> int:
+        """Next chunk_size multiple — bounds distinct prefill jit signatures
+        (each distinct prompt length no longer triggers a fresh compile).
+        Capped so padding never pushes text + image/frame tokens past the
+        cache bound a legal prompt still fits in."""
+        b = self.chunk_size
+        return min(((n + b - 1) // b) * b, self.max_len - self._extra)
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            self._prefill_cache[bucket] = jax.jit(
+                partial(prefill, self.cfg, max_len=self.max_len))
+        return self._prefill_cache[bucket]
 
     def _prefill_sub(self, tokens: list):
-        """Standard exact-length prefill of `tokens` into a B=1 sub-cache.
+        """Exact-state prefill of `tokens` into a B=1 sub-cache, padded to a
+        bucketed length (one jit signature per bucket; `length` keeps the
+        logits, cache position and SSM state exact at the true length).
         Returns (last-position logits, sub-cache)."""
-        toks = jnp.asarray(tokens, jnp.int32)[None, :]
+        n = len(tokens)
+        bucket = self._bucket_len(n)
+        toks = jnp.asarray(list(tokens) + [0] * (bucket - n), jnp.int32)[None, :]
         batch = {"tokens": toks}
         if self.cfg.family == "encdec":
             batch["frames"] = jnp.zeros((1, self.cfg.encoder_seq, self.cfg.d_model),
@@ -151,23 +217,28 @@ class ServingEngine:
             from repro.models.model import VISION_DIM
             batch["image_embeds"] = jnp.zeros((1, self.cfg.n_image_tokens, VISION_DIM),
                                               jnp.float32)
-        return self._prefill_fn(toks.shape[1])(self.params, batch)
+        self.stats["prefill_invocations"] += 1
+        # attention-FLOPs proxy: KV positions computed against (S x S matrix)
+        self.stats["prefill_ctx_positions"] += (self._extra + bucket) ** 2
+        return self._prefill_fn(bucket)(self.params, batch,
+                                        length=jnp.asarray(n, jnp.int32))
 
     def _suffix_prefill(self, sub: dict, tokens: list):
-        """Advance a B=1 sub-cache through the unshared prompt suffix, one
-        exact decode step per token (position-indexed KV writes; the same
-        recurrence decode uses, so SSM/conv state stays correct). Returns
-        (last-token logits, sub-cache)."""
+        """Slab layout: advance a B=1 sub-cache through the unshared prompt
+        suffix, one exact decode step per token (position-indexed KV writes;
+        the same recurrence decode uses, so SSM/conv state stays correct).
+        Returns (last-token logits, sub-cache)."""
         logits = None
         for t in tokens:
             logits, sub = self._decode(self.params,
                                        jnp.asarray([[t]], jnp.int32), sub)
+            self.stats["prefill_invocations"] += 1
+            # each token-step attends the full max_len KV buffer
+            self.stats["prefill_ctx_positions"] += self.max_len
         return logits, sub
 
-    def _insert(self, slot: int, req: Request):
+    def _insert_slab(self, slot: int, req: Request):
         prompt = req.prompt
-        assert len(prompt) <= self.max_len, (
-            f"prompt ({len(prompt)}) exceeds cache max_len={self.max_len}")
         sub, prefix_len = None, 0
         if self.prefix_cache is not None:
             entry = self.prefix_cache.match(prompt)
@@ -184,7 +255,8 @@ class ServingEngine:
                     _, sub = self._prefill_sub(prompt[:boundary])
                     self.stats["prefill_tokens"] += boundary
                     self.prefix_cache.insert(
-                        prompt[:boundary], prefix_snapshot(sub, boundary))
+                        prompt[:boundary],
+                        prefix_snapshot(sub, self._extra + boundary))
                     self.stats["prefix_inserts"] += 1
                     prefix_len = boundary
         if sub is None:
@@ -194,16 +266,281 @@ class ServingEngine:
             logits, sub = self._suffix_prefill(sub, prompt[prefix_len:])
             self.stats["prefill_tokens"] += len(prompt) - prefix_len
         self.cache = write_slot(self.cache, sub, slot)
+        return logits
+
+    # -------------------------------------------------- paged-mode prefill --
+
+    def _init_state_sub(self) -> dict:
+        """Fresh B=1 pure-state sub-cache (pos + conv/ssm/cross buffers)."""
+        sub = {}
+        for k, a in self.cache.items():
+            sub[k] = jnp.zeros((), jnp.int32) if k == "pos" else \
+                jnp.zeros_like(a[:, :1])
+        if self.cfg.family == "encdec":
+            if self._cross_kv is None:
+                frames = jnp.zeros((1, self.cfg.encoder_seq, self.cfg.d_model),
+                                   jnp.dtype(self.cfg.dtype))
+                ck, cv = encode_cross_kv(self.cfg, self.params, frames)
+                self._cross_kv = (ck.astype(self.cache["ck"].dtype),
+                                  cv.astype(self.cache["cv"].dtype))
+            sub["ck"], sub["cv"] = self._cross_kv
+        return sub
+
+    def _make_paged_decode(self):
+        cfg, ps = self.cfg, self.page_size
+
+        def step(params, tokens, state, pools, table, write_ids):
+            dense = dict(state)
+            dense.update(gather_page_views(pools, table))
+            logits, new = decode_step(cfg, params, tokens, dense)
+            new_state = {k: new[k] for k in state}
+            if pools:
+                starts = (state["pos"] // ps) * ps
+                pools = scatter_token_pages(pools, new, write_ids, starts, ps)
+            return logits, new_state, pools
+        return step
+
+    def _chunk_fn(self, n_ctx: int, nb: int, with_images: bool):
+        key = (n_ctx, nb, with_images)
+        if key not in self._chunk_fns:
+            cfg, ps = self.cfg, self.page_size
+            has_pool = bool(self.alloc.pools)
+
+            def fn(params, state, pools, ctx_ids, tokens, length, write_ids, b0):
+                batch = {"tokens": tokens}
+                if with_images:
+                    from repro.models.model import VISION_DIM
+                    batch["image_embeds"] = jnp.zeros(
+                        (1, cfg.n_image_tokens, VISION_DIM), jnp.float32)
+                dense = dict(state)
+                if has_pool:
+                    dense.update(gather_page_views(pools, ctx_ids[None, :]))
+                logits, new = prefill_chunk(cfg, params, batch, dense,
+                                            length=length)
+                new_state = {k: new[k] for k in state}
+                if has_pool:
+                    pools = scatter_chunk_pages(pools, new, write_ids, b0, ps, nb)
+                return logits, new_state, pools
+            self._chunk_fns[key] = jax.jit(fn)
+        return self._chunk_fns[key]
+
+    def _ensure_pages(self, n: int, acquired: list) -> list:
+        """Allocate n pages, evicting LRU prefix entries under pool pressure
+        (pinned entries — pages shared with live slots — free nothing and the
+        loop moves on to the next victim). Newly allocated ids are appended
+        to `acquired`; on hard exhaustion the caller rolls that list back."""
+        while True:
+            try:
+                ids = self.alloc.alloc(n)
+                acquired.extend(ids)
+                return ids
+            except PagePoolExhausted:
+                if self.prefix_cache is not None and \
+                        self.prefix_cache.pop_lru() is not None:
+                    continue
+                raise
+
+    def _cow_page(self, src: int, acquired: list) -> int:
+        """copy_page with the same evict-LRU-under-pressure behaviour as
+        `_ensure_pages`. `src` must be retained by the caller so a victim
+        eviction cannot free it mid-copy."""
+        while True:
+            try:
+                dst = self.alloc.copy_page(src)
+                acquired.append(dst)
+                return dst
+            except PagePoolExhausted:
+                if self.prefix_cache is not None and \
+                        self.prefix_cache.pop_lru() is not None:
+                    continue
+                raise
+
+    def _chunked_prefill(self, slot: int, state: dict, tokens: list, lpos: int):
+        """Feed `tokens` through fixed-size prefill chunks. Every chunk is
+        padded to `chunk_size` and carries its true length traced, so one
+        jit signature (per pow2-bucketed context width) serves every prompt
+        length and offset. KV is written straight into the slot's pages
+        through a context view gathered over the page table. Returns
+        (last-chunk logits, state, new logical position)."""
+        cs, ps = self.chunk_size, self.page_size
+        pages = self.slot_pages[slot]
+        has_pool = bool(self.alloc.pools)
+        logits, i, n = None, 0, len(tokens)
+        while i < n:
+            true_clen = min(cs, n - i)
+            with_images = self._extra > 0 and lpos == 0
+            extra = self._extra if with_images else 0
+            llen_pad = cs + extra         # positions the padded chunk touches
+            if has_pool:
+                nb = (llen_pad + ps - 2) // ps + 1 if ps > 1 else llen_pad
+                need = -(-(lpos + llen_pad) // ps)
+                n_ctx = _pow2_at_least(max(need, nb))
+                b0 = min(lpos // ps, n_ctx - nb)
+                ctx = [pages[b] if b < len(pages) else PAGE_SINK
+                       for b in range(n_ctx)]
+                wids = [pages[b] if b < len(pages) else PAGE_SINK
+                        for b in range(b0, b0 + nb)]
+            else:
+                nb = n_ctx = b0 = 0
+                ctx, wids = [], []
+            chunk = list(tokens[i:i + true_clen]) + [0] * (cs - true_clen)
+            fn = self._chunk_fn(n_ctx, nb, with_images)
+            logits, state, self.alloc.pools = fn(
+                self.params, state, self.alloc.pools,
+                jnp.asarray(ctx, jnp.int32),
+                jnp.asarray(chunk, jnp.int32)[None, :],
+                jnp.asarray(true_clen, jnp.int32),
+                jnp.asarray(wids, jnp.int32), jnp.asarray(b0, jnp.int32))
+            self.stats["prefill_invocations"] += 1
+            self.stats["prefill_chunks"] += 1
+            self.stats["prefill_ctx_positions"] += \
+                llen_pad * (n_ctx * ps if has_pool else llen_pad)
+            i += true_clen
+            lpos += true_clen + extra
+        return logits, state, lpos
+
+    def _snapshot_prefix_paged(self, slot: int, prefix: list, state: dict):
+        """Store a prefix entry as *page references*: full pages shared by
+        reference (ref-counted), the partially-filled boundary page copied
+        once so the slot can keep writing into its own copy (CoW)."""
+        lp = self._extra + len(prefix)
+        pages = self.slot_pages[slot]
+        full = lp // self.page_size
+        entry_pages = list(pages[:full])
+        self.alloc.retain(entry_pages)
+        tail = None
+        if lp % self.page_size and full < len(pages):
+            try:
+                tail = self._cow_page(pages[full], [])
+            except PagePoolExhausted:
+                # caching this prefix is an optimization, not a requirement:
+                # under hard pool pressure skip the snapshot, keep serving
+                self.alloc.release(entry_pages)
+                return
+            self.stats["cow_copies"] += 1
+        snap = dict(state)
+        nbytes = ((len(entry_pages) + (1 if tail is not None else 0))
+                  * self.alloc.page_nbytes + cache_nbytes(snap))
+        alloc, ids = self.alloc, entry_pages + ([tail] if tail is not None else [])
+        self.prefix_cache.insert(prefix, snap, pages=entry_pages,
+                                 tail_page=tail, nbytes=nbytes,
+                                 release=(lambda: alloc.release(ids)))
+        self.stats["prefix_inserts"] += 1
+
+    def _insert_paged(self, slot: int, req: Request):
+        prompt = req.prompt
+        plen = len(prompt)
+        total = self._extra + plen
+        ps = self.page_size
+        cap = min(total + req.max_new, self.max_len)   # positions ever written
+        blocks = -(-cap // ps) if self.alloc.pools else 0
+        acquired: list = []
+        state, prefix_len, pages = None, 0, []
+        try:
+            if self.prefix_cache is not None:
+                entry = self.prefix_cache.match(prompt)
+                if entry is not None and len(entry.tokens) >= self.prefix_min_len:
+                    # O(1) splice: share the full pages, CoW the boundary page
+                    prefix_len = len(entry.tokens)
+                    pages = list(entry.pages)
+                    self.alloc.retain(pages)
+                    acquired.extend(pages)
+                    if entry.tail_page is not None:
+                        tail_src = entry.tail_page
+                        self.alloc.retain([tail_src])   # survive a victim evict
+                        try:
+                            pages.append(self._cow_page(tail_src, acquired))
+                        finally:
+                            self.alloc.release([tail_src])
+                        self.stats["cow_copies"] += 1
+                    state = dict(entry.cache)
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_saved_tokens"] += prefix_len
+            if blocks > len(pages):
+                pages = pages + self._ensure_pages(blocks - len(pages), acquired)
+        except PagePoolExhausted:
+            if acquired:                    # roll back the splice/CoW refs
+                self.alloc.release(acquired)
+            raise
+        self.slot_pages[slot] = pages
+        if state is None:
+            state = self._init_state_sub()
+            boundary = 0 if self.prefix_cache is None else \
+                min(int(req.shared_len), plen - 1)
+            if boundary >= self.prefix_min_len:
+                _, state, lpos = self._chunked_prefill(slot, state,
+                                                       prompt[:boundary], 0)
+                self._snapshot_prefix_paged(slot, prompt[:boundary], state)
+                logits, state, lpos = self._chunked_prefill(
+                    slot, state, prompt[boundary:], lpos)
+            else:
+                logits, state, lpos = self._chunked_prefill(slot, state, prompt, 0)
+            self.stats["prefill_tokens"] += plen
+        else:
+            logits, state, lpos = self._chunked_prefill(
+                slot, state, prompt[prefix_len:], self._extra + prefix_len)
+            self.stats["prefill_tokens"] += plen - prefix_len
+        self.cache = write_slot(self.cache, state, slot)
+        self._pos_h[slot] = lpos
+        return logits
+
+    def _free_slot_pages(self, slot: int):
+        if self.paged and self.slot_pages[slot]:
+            self.alloc.release(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+
+    def _page_table(self, width: int):
+        """Page table truncated to the live rows' block high-water mark
+        (pow2-bucketed by the caller): decode gathers — and attends — only
+        the blocks actually in use instead of the full max_len slab."""
+        tbl = np.full((self.slots, width), PAGE_SINK, np.int32)
+        for s, pages in enumerate(self.slot_pages):
+            if self._live[s]:
+                tbl[s, :min(len(pages), width)] = pages[:width]
+        return jnp.asarray(tbl)
+
+    # ----------------------------------------------------------- prefill --
+
+    def _insert(self, slot: int, req: Request):
+        prompt = req.prompt
+        assert self._extra + len(prompt) <= self.max_len, (
+            f"prompt ({len(prompt)} + {self._extra} image/frame tokens) "
+            f"exceeds cache max_len={self.max_len}")
+        logits = (self._insert_paged if self.paged else self._insert_slab)(slot, req)
         nxt = int(jnp.argmax(logits[0, -1]))
         self._tokens = self._tokens.at[slot, 0].set(nxt)
         req.out.append(nxt)
         self.active[slot] = req
         self._live[slot] = True
+        self._note_kv_bytes()
+
+    def _note_kv_bytes(self):
+        used = cache_nbytes(self.cache)
+        if self.paged:
+            used += self.alloc.nbytes_in_use
+        elif self.prefix_cache is not None:
+            used += self.prefix_cache.nbytes
+        self.stats["kv_bytes_peak"] = max(self.stats["kv_bytes_peak"], used)
 
     # ------------------------------------------------------------- decode --
 
     def _step(self):
-        logits, self.cache = self._decode(self.params, self._tokens, self.cache)
+        if self.paged:
+            write_ids = np.full((self.slots,), PAGE_SINK, np.int32)
+            maxb = 1
+            for s in range(self.slots):
+                if self._live[s]:
+                    maxb = max(maxb, len(self.slot_pages[s]))
+                    b = int(self._pos_h[s]) // self.page_size
+                    if b < len(self.slot_pages[s]):
+                        write_ids[s] = self.slot_pages[s][b]
+            width = min(_pow2_at_least(maxb), self.pages_per_slot)
+            logits, self.cache, self.alloc.pools = self._paged_decode(
+                self.params, self._tokens, self.cache, self.alloc.pools,
+                self._page_table(width), jnp.asarray(write_ids))
+            self._pos_h += 1
+        else:
+            logits, self.cache = self._decode(self.params, self._tokens, self.cache)
         self.stats["decode_steps"] += 1
         self.stats["decode_slot_steps"] += len(self.active)
         self.stats["max_live"] = max(self.stats["max_live"], len(self.active))
@@ -218,6 +555,7 @@ class ServingEngine:
                 self.finished[req.rid] = req
                 del self.active[slot]
                 self._live[slot] = False
+                self._free_slot_pages(slot)
         self._tokens = jnp.asarray(nxt[:, None], jnp.int32)
 
     def drain_slot(self, slot: int):
@@ -227,6 +565,7 @@ class ServingEngine:
         if slot in self.active:
             req = self.active.pop(slot)
             self._live[slot] = False
+            self._free_slot_pages(slot)
             req.out.clear()
             req.retries += 1
             self.stats["evictions"] += 1
@@ -250,7 +589,14 @@ class ServingEngine:
             max_steps -= 1
             while self.queue and not self._live.all():
                 slot = int(np.argmin(self._live))
-                self._insert(slot, self.queue.popleft())
+                req = self.queue.popleft()
+                try:
+                    self._insert(slot, req)
+                except PagePoolExhausted:
+                    # keep the request visible: it is back at the queue head,
+                    # never silently dropped (PR 2 hardening contract)
+                    self.queue.appendleft(req)
+                    raise
             if self.active:
                 self._step()
         if self.queue or self.active:

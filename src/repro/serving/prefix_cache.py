@@ -24,7 +24,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.models.cache_ops import cache_nbytes
 
@@ -32,9 +32,24 @@ from repro.models.cache_ops import cache_nbytes
 @dataclass
 class PrefixEntry:
     tokens: tuple                 # the prefix token path
-    cache: dict                   # trimmed B=1 snapshot (see cache_ops)
+    cache: dict                   # trimmed B=1 snapshot (see cache_ops); in
+    #                               the paged layout, the pure-state part only
     nbytes: int
     hits: int = 0
+    # Paged layout (DESIGN.md §12): the prefix KV lives in the engine's page
+    # pool, referenced rather than copied. `pages` are the completely-filled
+    # pages (shared by reference with every slot that hits), `tail_page` the
+    # partially-filled boundary page (copy-on-write on hit). `release` drops
+    # the entry's page references; the store calls it exactly once when the
+    # entry is evicted or cleared.
+    pages: tuple = ()
+    tail_page: Optional[int] = None
+    release: Optional[Callable[[], None]] = None
+
+    def _drop(self) -> None:
+        if self.release is not None:
+            rel, self.release = self.release, None
+            rel()
 
 
 @dataclass
@@ -86,13 +101,19 @@ class PrefixCache:
 
     # ------------------------------------------------------------ insert --
 
-    def insert(self, prefix: list, snapshot: dict) -> PrefixEntry:
+    def insert(self, prefix: list, snapshot: dict, *, pages=(),
+               tail_page: Optional[int] = None, nbytes: Optional[int] = None,
+               release: Optional[Callable[[], None]] = None) -> PrefixEntry:
         key = tuple(prefix)
         if key in self._entries:                     # refresh, don't duplicate
+            if release is not None:                  # drop the redundant copy
+                release()
             self._entries.move_to_end(key)
             return self._entries[key]
-        entry = PrefixEntry(tokens=key, cache=snapshot,
-                            nbytes=cache_nbytes(snapshot))
+        entry = PrefixEntry(
+            tokens=key, cache=snapshot,
+            nbytes=cache_nbytes(snapshot) if nbytes is None else int(nbytes),
+            pages=tuple(pages), tail_page=tail_page, release=release)
         self._entries[key] = entry
         self.stats.inserts += 1
         self._evict()
@@ -102,8 +123,21 @@ class PrefixCache:
         while len(self._entries) > self.max_entries or (
                 self.max_bytes is not None and self.nbytes > self.max_bytes
                 and len(self._entries) > 1):
-            self._entries.popitem(last=False)
+            _, entry = self._entries.popitem(last=False)
+            entry._drop()
             self.stats.evictions += 1
 
+    def pop_lru(self) -> Optional[PrefixEntry]:
+        """Force-evict the least-recently-used entry (page-pool pressure);
+        returns it (references already released) or None when empty."""
+        if not self._entries:
+            return None
+        _, entry = self._entries.popitem(last=False)
+        entry._drop()
+        self.stats.evictions += 1
+        return entry
+
     def clear(self) -> None:
+        for entry in self._entries.values():
+            entry._drop()
         self._entries.clear()

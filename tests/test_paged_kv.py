@@ -1,0 +1,322 @@
+"""Paged KV cache (DESIGN.md §12): allocator semantics + layout parity.
+
+The page/block layout is a serving-substrate change only — decoded outputs
+must be byte-identical to the slab layout (with the prefix cache on or off)
+for every model family, while prefill happens in strictly fewer jit
+invocations than the slab path's per-token suffix decode. The allocator
+tests pin down the failure modes that corrupt shared KV: double frees,
+writes into shared prefix pages (copy-on-write boundary), and eviction of
+entries whose pages are pinned by live slots.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import lm_data
+from repro.models import init_decode_cache, init_params, prefill, prefill_chunk
+from repro.models.cache_ops import (PAGE_SINK, PageAllocator,
+                                    PagePoolExhausted, gather_page_views)
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.prefix_cache import PrefixCache
+
+QWEN = "qwen2.5-3b"
+
+
+def _cfg(arch=QWEN):
+    return get_smoke_config(arch).replace(vocab_size=lm_data.VOCAB)
+
+
+# --------------------------------------------------------- allocator unit --
+
+
+def test_page_allocator_free_list_and_exhaustion():
+    alloc = PageAllocator(_cfg(), num_pages=5, page_size=8)
+    assert alloc.free_pages == 4                      # page 0 is the sink
+    a = alloc.alloc(3)
+    assert len(set(a)) == 3 and PAGE_SINK not in a
+    assert alloc.used_pages == 3
+    with pytest.raises(PagePoolExhausted):
+        alloc.alloc(2)
+    assert alloc.free_pages == 1                      # all-or-nothing: no leak
+    alloc.release(a)
+    assert alloc.free_pages == 4 and alloc.used_pages == 0
+
+
+def test_page_allocator_refcounts_and_double_free():
+    alloc = PageAllocator(_cfg(), num_pages=4, page_size=8)
+    (p,) = alloc.alloc(1)
+    alloc.retain([p])                                 # rc=2 (shared prefix)
+    alloc.release([p])                                # rc=1: still live
+    assert alloc.free_pages == 2
+    alloc.release([p])                                # rc=0: freed
+    assert alloc.free_pages == 3
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.release([p])
+    with pytest.raises(RuntimeError, match="retain of free"):
+        alloc.retain([p])
+
+
+def test_page_allocator_cow_copies_content():
+    cfg = _cfg()
+    alloc = PageAllocator(cfg, num_pages=6, page_size=8)
+    (src,) = alloc.alloc(1)
+    key = next(iter(alloc.pools))
+    filled = alloc.pools[key].at[:, src].set(1.25)
+    alloc.pools[key] = filled
+    dst = alloc.copy_page(src)
+    assert dst != src and alloc.refcount[dst] == 1
+    np.testing.assert_array_equal(np.asarray(alloc.pools[key][:, dst]),
+                                  np.asarray(alloc.pools[key][:, src]))
+    # the copy is independent: writing dst leaves src intact
+    alloc.pools[key] = alloc.pools[key].at[:, dst].set(-3.0)
+    assert float(alloc.pools[key][:, src].max()) == 1.25
+
+
+def test_gather_page_views_roundtrip():
+    cfg = _cfg()
+    alloc = PageAllocator(cfg, num_pages=8, page_size=4)
+    ids = alloc.alloc(3)
+    key = next(iter(alloc.pools))
+    pool = alloc.pools[key]
+    for n, i in enumerate(ids):
+        pool = pool.at[:, i].set(float(n + 1))
+    view = gather_page_views({key: pool}, jnp.asarray([ids], jnp.int32))[key]
+    # (L, 1, 3*ps, ...): page order follows the table, not physical order
+    got = np.asarray(view)[0, 0, :, 0]
+    want = np.repeat([1.0, 2.0, 3.0], 4)
+    np.testing.assert_array_equal(got[..., 0] if got.ndim > 1 else got, want)
+
+
+# ------------------------------------------------------ layout parity ------
+
+
+def _run_engine(cfg, params, prompts, shared, *, layout, pc, page_size=8,
+                chunk_size=5, num_pages=None):
+    eng = ServingEngine(cfg, params, slots=2, max_len=64, kv_layout=layout,
+                        prefix_cache=pc, prefix_min_len=4,
+                        page_size=page_size, chunk_size=chunk_size,
+                        num_pages=num_pages)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=4, eos_id=-1,
+                           shared_len=shared))
+    done = eng.run()
+    return eng, {i: done[i].out for i in range(len(prompts))}
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "deepseek-v2-lite-16b",
+                                  "falcon-mamba-7b", "zamba2-2.7b",
+                                  "whisper-medium", "llava-next-mistral-7b"])
+def test_paged_slab_identical_outputs_all_families(arch):
+    """dense / moe+MLA / ssm / hybrid / encdec / vlm: decoded outputs are
+    byte-identical across {slab, paged} x {prefix cache off, on}, and the
+    paged path prefills in strictly fewer jit invocations than the slab
+    path's per-token suffix decode."""
+    cfg = _cfg(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shared = [7, 3, 9, 4, 2, 8, 1, 6, 5, 7, 3, 2]
+    prompts = [shared + [10 + i, 20 + i, 30 + i] for i in range(3)]
+    _, slab_off = _run_engine(cfg, params, prompts, len(shared),
+                              layout="slab", pc=False)
+    e_pg_off, paged_off = _run_engine(cfg, params, prompts, len(shared),
+                                      layout="paged", pc=False)
+    e_slab, slab_on = _run_engine(cfg, params, prompts, len(shared),
+                                  layout="slab", pc=True)
+    e_paged, paged_on = _run_engine(cfg, params, prompts, len(shared),
+                                    layout="paged", pc=True)
+    assert slab_off == paged_off == slab_on == paged_on
+    # token accounting is layout-invariant
+    assert e_paged.stats["prefill_tokens"] == e_slab.stats["prefill_tokens"]
+    assert e_paged.stats["prefix_hits"] == e_slab.stats["prefix_hits"] == 2
+    # chunked suffix prefill beats token-at-a-time suffix prefill
+    assert e_paged.stats["prefill_invocations"] < \
+        e_slab.stats["prefill_invocations"]
+    # every slot page returned to the pool; only prefix entries hold refs
+    live = sum(1 for rc in e_paged.alloc.refcount[1:] if rc > 0)
+    entry_pages = sum(len(e.pages) + (e.tail_page is not None)
+                      for e in e_paged.prefix_cache._entries.values())
+    assert live == entry_pages
+
+
+def test_paged_cow_boundary_page_isolation():
+    """A prefix hit writes its suffix through a CoW copy — the entry's
+    boundary page must stay byte-identical so later hits replay the same
+    prefix KV."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pc = PrefixCache(max_entries=8)
+    eng = ServingEngine(cfg, params, slots=1, max_len=64, prefix_cache=pc,
+                        prefix_min_len=4, page_size=8, chunk_size=6)
+    shared = [7, 3, 9, 4, 2, 8, 1, 6, 5, 7]        # 10 tokens: tail page busy
+    eng.submit(Request(rid=0, prompt=shared + [11, 12], max_new=3, eos_id=-1,
+                       shared_len=len(shared)))
+    eng.run()
+    (entry,) = pc._entries.values()
+    assert entry.tail_page is not None and len(entry.pages) == 1
+    key = next(iter(eng.alloc.pools))
+    before = np.asarray(eng.alloc.pools[key][:, entry.tail_page]).copy()
+    # two hits, each decoding a different suffix through its own CoW copy
+    for rid, tail in ((1, [21, 22]), (2, [31, 32, 33])):
+        eng.submit(Request(rid=rid, prompt=shared + tail, max_new=3,
+                           eos_id=-1, shared_len=len(shared)))
+    done = eng.run()
+    after = np.asarray(eng.alloc.pools[key][:, entry.tail_page])
+    np.testing.assert_array_equal(before, after)
+    assert eng.stats["prefix_hits"] == 2 and eng.stats["cow_copies"] >= 3
+    # and the hits decode exactly what a cold engine would
+    eng2 = ServingEngine(cfg, params, slots=1, max_len=64, prefix_cache=False,
+                         page_size=8, chunk_size=6)
+    for rid, tail in ((1, [21, 22]), (2, [31, 32, 33])):
+        eng2.submit(Request(rid=rid, prompt=shared + tail, max_new=3,
+                            eos_id=-1, shared_len=len(shared)))
+    done2 = eng2.run()
+    assert {r: done[r].out for r in (1, 2)} == {r: done2[r].out for r in (1, 2)}
+
+
+def test_paged_pool_pressure_evicts_lru_then_pins_win():
+    """Under pool pressure the engine evicts LRU prefix entries to free
+    pages; entries pinned by a live slot free nothing, and hard exhaustion
+    surfaces as PagePoolExhausted with the partial allocation rolled back."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pc = PrefixCache(max_entries=8)
+    # pool of 6 usable pages: slot 0's 4 blocks + the snapshot's CoW tail
+    # leave exactly one free page
+    eng = ServingEngine(cfg, params, slots=2, max_len=32, prefix_cache=pc,
+                        prefix_min_len=4, page_size=8, chunk_size=8,
+                        num_pages=7)
+    p1 = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]
+    eng._insert(0, Request(rid=0, prompt=p1 + [11], max_new=20, eos_id=-1,
+                           shared_len=len(p1)))       # slot 0 stays live
+    assert len(pc) == 1 and eng.alloc.free_pages == 1
+    entries_before = pc.stats.evictions
+    # a second, different prefix group: needs 4 fresh blocks -> pressure.
+    # The only evictable entry is pinned by slot 0, so eviction frees
+    # nothing and allocation must fail cleanly.
+    free_before = eng.alloc.free_pages
+    p2 = [9, 9, 9, 9, 8, 8, 8, 8, 7, 7]
+    with pytest.raises(PagePoolExhausted):
+        eng._insert(1, Request(rid=1, prompt=p2 + [1], max_new=20, eos_id=-1,
+                               shared_len=len(p2)))
+    assert pc.stats.evictions > entries_before        # it did try the LRU
+    assert eng.alloc.free_pages >= free_before        # rollback: no leak
+    # freeing the pinning slot releases its pages and the insert succeeds
+    eng.drain_slot(0)
+    eng._insert(1, Request(rid=1, prompt=p2 + [1], max_new=4, eos_id=-1,
+                           shared_len=len(p2)))
+    assert eng.active[1].rid == 1
+
+
+def test_paged_prefix_eviction_returns_pages():
+    """PrefixCache LRU eviction must release page references: a bounded
+    store over many prefix groups cannot grow the pool footprint."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pc = PrefixCache(max_entries=2)
+    eng = ServingEngine(cfg, params, slots=1, max_len=64, prefix_cache=pc,
+                        prefix_min_len=4, page_size=8, chunk_size=8)
+    for g in range(4):                                # 4 groups, store holds 2
+        base = [g + 1] * 10
+        for t in range(2):
+            eng.submit(Request(rid=10 * g + t, prompt=base + [30 + t],
+                               max_new=3, eos_id=-1, shared_len=len(base)))
+        eng.run()
+    assert len(pc) == 2 and pc.stats.evictions == 2
+    live = sum(1 for rc in eng.alloc.refcount[1:] if rc > 0)
+    entry_pages = sum(len(e.pages) + (e.tail_page is not None)
+                      for e in pc._entries.values())
+    assert live == entry_pages                        # evicted pages returned
+
+
+# -------------------------------------------------- bucketed jit prefill ---
+
+
+def test_slab_prefill_signatures_bucketed():
+    """Distinct prompt lengths inside one chunk_size bucket share a single
+    prefill compile, and padding never changes the decoded output."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def outs(chunk_size):
+        eng = ServingEngine(cfg, params, slots=2, max_len=64,
+                            kv_layout="slab", chunk_size=chunk_size)
+        for i, n in enumerate((9, 12, 15)):
+            eng.submit(Request(rid=i, prompt=list(range(1, n + 1)),
+                               max_new=4, eos_id=-1))
+        done = eng.run()
+        return eng, {i: done[i].out for i in range(3)}
+
+    e16, o16 = outs(16)
+    e1, o1 = outs(1)                   # bucket==exact length: PR 2 behaviour
+    assert o16 == o1
+    assert len(e16._prefill_cache) == 1        # 9, 12, 15 -> one 16-signature
+    assert len(e1._prefill_cache) == 3
+
+
+def test_slab_bucket_respects_image_tokens():
+    """Bucket padding must never push text + image tokens past max_len for
+    a prompt that legally fits (regression: vlm near the cache bound)."""
+    cfg = _cfg("llava-next-mistral-7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_img = cfg.n_image_tokens
+    eng = ServingEngine(cfg, params, slots=1, max_len=64, kv_layout="slab",
+                        chunk_size=32)
+    n = 64 - n_img - 1                 # fits exactly, bucket would round past
+    eng.submit(Request(rid=0, prompt=list(range(1, n + 1)), max_new=2,
+                       eos_id=-1))
+    done = eng.run()
+    assert len(done[0].out) == 2
+
+
+def test_bucketed_prefill_short_ssm_prompt_exact():
+    """length < ssm_conv-1: the conv window must see zero history, not a
+    clamped misaligned slice (regression)."""
+    cfg = _cfg("falcon-mamba-7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = [5, 9]
+    exact_l, exact_c = prefill(
+        cfg, params, {"tokens": jnp.asarray(toks, jnp.int32)[None]}, 16)
+    padded = toks + [0] * 6
+    buck_l, buck_c = prefill(
+        cfg, params, {"tokens": jnp.asarray(padded, jnp.int32)[None]}, 16,
+        jnp.int32(2))
+    np.testing.assert_allclose(np.asarray(buck_l), np.asarray(exact_l),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(buck_c["conv"]),
+                                  np.asarray(exact_c["conv"]))
+
+
+def test_run_requeues_request_on_pool_exhaustion():
+    """A PagePoolExhausted mid-run() must leave the victim request at the
+    queue head, never silently dropped (regression)."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # pool too small for even one request's pages
+    eng = ServingEngine(cfg, params, slots=1, max_len=32, page_size=8,
+                        num_pages=2, prefix_cache=False)
+    req = Request(rid=0, prompt=list(range(1, 20)), max_new=4, eos_id=-1)
+    eng.submit(req)
+    with pytest.raises(PagePoolExhausted):
+        eng.run()
+    assert list(eng.queue) == [req]
+    assert not eng.active and not eng.finished
+
+
+def test_chunked_prefill_matches_full_prefill():
+    """Direct model-level check: successive prefill_chunk calls reproduce
+    full-prefill logits and cache position."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = list(np.random.RandomState(7).randint(1, 200, size=13))
+    full_logits, full_cache = prefill(
+        cfg, params, {"tokens": jnp.asarray(toks, jnp.int32)[None]}, 32)
+    cache = init_decode_cache(cfg, 1, 32)
+    logits = None
+    for a, b in ((0, 5), (5, 9), (9, 13)):
+        logits, cache = prefill_chunk(
+            cfg, params, {"tokens": jnp.asarray(toks[a:b], jnp.int32)[None]},
+            cache)
+    assert int(cache["pos"]) == int(full_cache["pos"]) == 13
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               atol=1e-5, rtol=1e-5)
