@@ -1,0 +1,175 @@
+"""Speculative decoding vs plain decode on the extraction workload
+(DESIGN.md §14).
+
+Workload: the scheduler-shaped batch of (doc, attr) extraction needs a
+QUEST plan emits over the synthetic SWDE corpus, served three times through
+identical engines (paged KV + prefix cache) differing only in the
+`spec_decode` knob:
+
+  off           — one target decode invocation per generated token;
+  prompt_lookup — n-gram drafting over each request's own prompt+output
+                  context (zero extra model cost);
+  draft         — draft-model drafting; the smoke workload self-drafts
+                  (draft = target), which is the acceptance *ceiling* of
+                  the verification machinery — a real deployment pairs a
+                  large target with a small zoo config.
+
+All three paths must return byte-identical result rows and identical ledger
+token columns (speculation changes how tokens are produced, never which).
+The decode economy is what moves: `decode_steps` counts target-model decode
+invocations (verify rounds included), and the draft path must do >= 30%
+fewer than plain decode at identical rows; acceptance rates are reported
+for both drafters.
+
+Emits `benchmarks/out/BENCH_spec_decode.json` (compared against the
+committed baseline by `benchmarks/compare.py` in CI) plus a CSV of the
+three paths. `--smoke` runs the reduced CI-sized workload.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.ledger import CostLedger
+from repro.core.scheduler import BatchScheduler
+from repro.data import lm_data
+from repro.data.corpus import make_swde_corpus
+from repro.extract.served import ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+
+OUT = Path(__file__).parent / "out"
+ATTRS = ["tuition", "enrollment", "university_name"]
+MAX_NEW = 32
+
+
+def _items(corpus, n_docs: int):
+    docs = sorted(corpus.tables["universities"])[:n_docs]
+    return [(d, a, "universities") for d in docs for a in ATTRS]
+
+
+def _run_path(corpus, items, *, spec: str, batch: int, params, cfg):
+    draft = (cfg, params) if spec == "draft" else None
+    engine = ServingEngine(cfg, params, slots=batch, max_len=1024,
+                           prefix_cache=True, spec_decode=spec, spec_k=4,
+                           draft_model=draft)
+    extractor = ServedExtractor(corpus, engine, max_new=MAX_NEW)
+    ledger = CostLedger()
+    retriever = TwoLevelRetriever(corpus, mode="rag_topk")
+    sched = BatchScheduler(retriever, extractor, ledger, {}, batch_size=batch)
+    t0 = time.time()
+    rows = sched.extract_many(items)
+    wall = time.time() - t0
+    s = engine.stats
+    return {
+        "rows": rows,
+        "wall_s": wall,
+        "decode_steps": s["decode_steps"],
+        "decode_slot_steps": s["decode_slot_steps"],
+        "spec_rounds": s["spec_rounds"],
+        "draft_tokens": s["draft_tokens"],
+        "accepted_tokens": s["accepted_tokens"],
+        "decode_steps_saved": s["decode_steps_saved"],
+        "prefill_tokens": s["prefill_tokens"],
+        "draft_model_steps": (engine.drafter.stats.get("draft_model_steps", 0)
+                              if engine.drafter else 0),
+        "ledger": ledger.snapshot(),
+    }
+
+
+def run(quick: bool = False, smoke: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = quick or smoke
+    corpus = make_swde_corpus()
+    items = _items(corpus, 4 if small else 12)
+    batch = 4 if small else 8
+
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    off = _run_path(corpus, items, spec="off", batch=batch,
+                    params=params, cfg=cfg)
+    pl = _run_path(corpus, items, spec="prompt_lookup", batch=batch,
+                   params=params, cfg=cfg)
+    dr = _run_path(corpus, items, spec="draft", batch=batch,
+                   params=params, cfg=cfg)
+
+    rows_identical = pl["rows"] == off["rows"] and dr["rows"] == off["rows"]
+    ledger_identical = all(
+        p["ledger"][c] == off["ledger"][c]
+        for p in (pl, dr)
+        for c in ("input_tokens", "output_tokens", "total_tokens", "per_phase"))
+    red_pl = 1 - pl["decode_steps"] / max(off["decode_steps"], 1)
+    red_dr = 1 - dr["decode_steps"] / max(off["decode_steps"], 1)
+    acc_pl = pl["accepted_tokens"] / max(pl["draft_tokens"], 1)
+    acc_dr = dr["accepted_tokens"] / max(dr["draft_tokens"], 1)
+
+    result = {
+        "bench": "spec_decode",
+        "smoke": bool(small),
+        "items": len(items),
+        "batch": batch,
+        "max_new": MAX_NEW,
+        "rows_identical": rows_identical,
+        "ledger_token_columns_identical": ledger_identical,
+        "decode_steps_off": off["decode_steps"],
+        "decode_steps_pl": pl["decode_steps"],
+        "decode_steps_draft": dr["decode_steps"],
+        "step_reduction_pl": round(red_pl, 4),
+        "step_reduction_draft": round(red_dr, 4),
+        "acceptance_rate_pl": round(acc_pl, 4),
+        "acceptance_rate_draft": round(acc_dr, 4),
+        "draft_tokens_pl": pl["draft_tokens"],
+        "accepted_tokens_pl": pl["accepted_tokens"],
+        "decode_steps_saved_pl": pl["decode_steps_saved"],
+        "decode_steps_saved_draft": dr["decode_steps_saved"],
+        "draft_model_steps": dr["draft_model_steps"],
+        "wall_off_s": round(off["wall_s"], 3),
+        "wall_pl_s": round(pl["wall_s"], 3),
+        "wall_draft_s": round(dr["wall_s"], 3),
+    }
+    with open(OUT / "BENCH_spec_decode.json", "w") as f:
+        json.dump(result, f, indent=2)
+    with open(OUT / "spec_decode.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["path", "decode_steps", "draft_tokens", "accepted_tokens",
+                    "decode_steps_saved", "wall_s"])
+        for name, r in (("off", off), ("prompt_lookup", pl), ("draft", dr)):
+            w.writerow([name, r["decode_steps"], r["draft_tokens"],
+                        r["accepted_tokens"], r["decode_steps_saved"],
+                        f"{r['wall_s']:.3f}"])
+
+    print(f"spec_decode: {len(items)} extractions @ batch {batch}, "
+          f"max_new {MAX_NEW} | rows identical: {rows_identical} | "
+          f"decode invocations off {off['decode_steps']} -> "
+          f"prompt_lookup {pl['decode_steps']} ({red_pl:.1%} fewer, "
+          f"acceptance {acc_pl:.1%}) -> draft {dr['decode_steps']} "
+          f"({red_dr:.1%} fewer, acceptance {acc_dr:.1%}) | wall "
+          f"{off['wall_s']:.2f}s / {pl['wall_s']:.2f}s / {dr['wall_s']:.2f}s")
+
+    assert rows_identical, "speculative decoding changed result rows"
+    assert ledger_identical, "speculation leaked into ledger token columns"
+    assert pl["decode_steps"] <= off["decode_steps"], \
+        "prompt-lookup must never need more decode invocations than plain decode"
+    assert red_dr >= 0.30, (
+        f"draft-path decode-invocation reduction {red_dr:.1%} below the 30% "
+        f"bar at identical rows")
+    assert pl["decode_steps_saved"] > 0, \
+        "prompt-lookup accepted nothing on the extraction workload"
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

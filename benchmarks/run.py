@@ -24,7 +24,7 @@ def main() -> None:
     from . import (bench_ablations, bench_baselines, bench_batching,
                    bench_filter_groups, bench_join, bench_kernels,
                    bench_multi_query, bench_ordering, bench_paged_kv,
-                   bench_prefix_cache, bench_roofline)
+                   bench_prefix_cache, bench_roofline, bench_spec_decode)
     from .common import BenchContext
 
     ctx = BenchContext()
@@ -34,6 +34,7 @@ def main() -> None:
         "prefix_cache": lambda: bench_prefix_cache.run(quick=args.quick),
         "multi_query": lambda: bench_multi_query.run(quick=args.quick),
         "paged_kv": lambda: bench_paged_kv.run(quick=args.quick),
+        "spec_decode": lambda: bench_spec_decode.run(quick=args.quick),
         "ordering": lambda: bench_ordering.run(ctx, quick=args.quick),
         "join": lambda: bench_join.run(ctx, quick=args.quick),
         "filter_groups": lambda: bench_filter_groups.run(ctx, quick=args.quick),

@@ -37,6 +37,13 @@ class CostLedger:
     # token columns stay cache-invariant and the saving is reported apart
     prefix_hits: int = 0
     saved_prefill_tokens: int = 0
+    # speculative-decoding accounting (DESIGN.md §14): like batching and
+    # prefix reuse, speculation changes how tokens are produced, never which
+    # — the token columns stay invariant and the draft/verify economy is
+    # reported apart (draft tokens proposed, accepted, decode steps saved)
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
+    decode_steps_saved: int = 0
     # parent session ledger (child() creates the link); charges forward up
     parent: Optional["CostLedger"] = None
 
@@ -62,6 +69,11 @@ class CostLedger:
         self.prefix_hits += hits
         self.saved_prefill_tokens += saved_tokens
 
+    def record_spec(self, drafted: int, accepted: int, steps_saved: int):
+        self.draft_tokens += drafted
+        self.accepted_tokens += accepted
+        self.decode_steps_saved += steps_saved
+
     @property
     def total_tokens(self) -> int:
         return self.input_tokens + self.output_tokens
@@ -79,6 +91,9 @@ class CostLedger:
             "max_batch": self.max_batch,
             "prefix_hits": self.prefix_hits,
             "saved_prefill_tokens": self.saved_prefill_tokens,
+            "draft_tokens": self.draft_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "decode_steps_saved": self.decode_steps_saved,
         }
 
     def merged(self, other: "CostLedger") -> "CostLedger":
@@ -93,6 +108,10 @@ class CostLedger:
         out.prefix_hits = self.prefix_hits + other.prefix_hits
         out.saved_prefill_tokens = (self.saved_prefill_tokens +
                                     other.saved_prefill_tokens)
+        out.draft_tokens = self.draft_tokens + other.draft_tokens
+        out.accepted_tokens = self.accepted_tokens + other.accepted_tokens
+        out.decode_steps_saved = (self.decode_steps_saved +
+                                  other.decode_steps_saved)
         for d in (self.per_phase, other.per_phase):
             for k, v in d.items():
                 out.per_phase[k] = out.per_phase.get(k, 0) + v

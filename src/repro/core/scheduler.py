@@ -210,13 +210,16 @@ class BatchScheduler:
         if not items:
             return
         hits0, saved0 = self._prefix_stats()
+        spec0 = self._spec_stats()
         out = self.extractor.extract_batch(items)
         hits1, saved1 = self._prefix_stats()
+        spec1 = self._spec_stats()
         self.stats.rounds += 1
         self.stats.submitted += len(items)
         self.stats.max_batch = max(self.stats.max_batch, len(items))
         self.ledger.record_batch(len(items))
         self.ledger.record_prefix(hits1 - hits0, saved1 - saved0)
+        self.ledger.record_spec(*(b - a for a, b in zip(spec0, spec1)))
         if owners:
             self.record_owner_batches(owners.get(k) for k in slots)
         for (doc_id, attr), (value, inp_tokens) in zip(slots, out):
@@ -258,10 +261,13 @@ class BatchScheduler:
         for i in range(0, len(items), self.batch_size):
             chunk = items[i:i + self.batch_size]
             hits0, saved0 = self._prefix_stats()
+            spec0 = self._spec_stats()
             res = self.extractor.extract_full_doc_batch(chunk)
             hits1, saved1 = self._prefix_stats()
+            spec1 = self._spec_stats()
             self.ledger.record_batch(len(chunk))
             self.ledger.record_prefix(hits1 - hits0, saved1 - saved0)
+            self.ledger.record_spec(*(b - a for a, b in zip(spec0, spec1)))
             if owners:
                 self.record_owner_batches(owners[i:i + self.batch_size])
             out.extend(res)
@@ -273,3 +279,12 @@ class BatchScheduler:
         st = getattr(self.extractor, "stats", None)
         return (getattr(st, "prefix_hits", 0),
                 getattr(st, "saved_prefill_tokens", 0))
+
+    def _spec_stats(self):
+        """(draft_tokens, accepted_tokens, decode_steps_saved) from the
+        extractor, when it serves through an engine with speculative
+        decoding on (0 otherwise)."""
+        st = getattr(self.extractor, "stats", None)
+        return (getattr(st, "draft_tokens", 0),
+                getattr(st, "accepted_tokens", 0),
+                getattr(st, "decode_steps_saved", 0))

@@ -42,6 +42,9 @@ class ServedStats:
     max_batch: int = 0
     prefix_hits: int = 0               # engine prefix-cache hits for our reqs
     saved_prefill_tokens: int = 0      # prefill tokens skipped via those hits
+    draft_tokens: int = 0              # speculative decode (DESIGN.md §14):
+    accepted_tokens: int = 0           # drafted/accepted tokens and decode
+    decode_steps_saved: int = 0        # steps saved for our requests
 
 
 class ServedExtractor:
@@ -86,6 +89,8 @@ class ServedExtractor:
         outs = {}
         es = self.engine.stats
         hits0, saved0 = es["prefix_hits"], es["prefix_saved_tokens"]
+        spec0 = (es["draft_tokens"], es["accepted_tokens"],
+                 es["decode_steps_saved"])
         for i in range(0, len(reqs), max(window, 1)):
             chunk = reqs[i:i + max(window, 1)]
             self.engine.submit_many(chunk)
@@ -103,6 +108,9 @@ class ServedExtractor:
                 outs[req.rid] = lm_data.decode(out)
         self.stats.prefix_hits += es["prefix_hits"] - hits0
         self.stats.saved_prefill_tokens += es["prefix_saved_tokens"] - saved0
+        self.stats.draft_tokens += es["draft_tokens"] - spec0[0]
+        self.stats.accepted_tokens += es["accepted_tokens"] - spec0[1]
+        self.stats.decode_steps_saved += es["decode_steps_saved"] - spec0[2]
         return outs
 
     def _generate(self, prefix_text: str, tail_text: str) -> str:

@@ -1,6 +1,8 @@
 from .config import ModelConfig
 from .model import (decode_step, encode_cross_kv, forward, init_decode_cache,
-                    init_params, param_count, prefill, prefill_chunk)
+                    init_params, param_count, prefill, prefill_chunk,
+                    verify_chunk)
 
 __all__ = ["ModelConfig", "init_params", "forward", "prefill", "prefill_chunk",
-           "decode_step", "encode_cross_kv", "init_decode_cache", "param_count"]
+           "decode_step", "encode_cross_kv", "init_decode_cache", "param_count",
+           "verify_chunk"]

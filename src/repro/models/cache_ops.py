@@ -232,6 +232,81 @@ def scatter_token_pages(pools: dict, dense: dict, write_ids, block_starts,
     return out
 
 
+def scatter_chunk_pages_rows(pools: dict, view: dict, write_tables, block0s,
+                             page_size: int, n_blocks: int) -> dict:
+    """Per-row `scatter_chunk_pages` for batched speculative verification.
+
+    view: per-key (Lax, B, nb_ctx*ps, *tail) gathered contexts the verify
+    chunk was computed over; row b dirtied blocks [block0s[b], block0s[b] +
+    n_blocks) of its own view, whose physical pages are write_tables[b]
+    ((B, n_blocks) int32, PAGE_SINK past each row's allocation). Rows never
+    share writable pages (the engine CoWs shared boundary pages at insert),
+    so duplicate sink ids are the only collisions and the sink is never read.
+    """
+    b0 = jnp.asarray(block0s, jnp.int32)
+    ids = jnp.asarray(write_tables, jnp.int32)               # (B, nb)
+    out = dict(pools)
+    for k, pool in pools.items():
+        v = view[k]
+        blocked = v.reshape((v.shape[0], v.shape[1], -1, page_size) + v.shape[3:])
+
+        def one_row(row, s):                     # (Lax, nb_ctx, ps, *tail)
+            return jax.lax.dynamic_slice_in_dim(row, s, n_blocks, axis=1)
+        pages = jax.vmap(one_row, in_axes=(1, 0), out_axes=1)(blocked, b0)
+        flat = pages.reshape((pages.shape[0], -1) + pages.shape[3:])
+        out[k] = pool.at[:, ids.reshape(-1)].set(flat.astype(pool.dtype))
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_range_op(pool, pid, lo, hi):
+    """Zero positions [lo, hi) of one page, pool donated: lowers to an
+    in-place scatter (like `_copy_page_op`) instead of a whole-pool copy
+    per scrub — pid/lo/hi are traced, so one compile serves every rollback."""
+    ps = pool.shape[2]
+    mask = (jnp.arange(ps) >= lo) & (jnp.arange(ps) < hi)
+    page = pool[:, pid]
+    page = jnp.where(mask.reshape((1, ps) + (1,) * (page.ndim - 2)),
+                     jnp.zeros((), pool.dtype), page)
+    return pool.at[:, pid].set(page)
+
+
+def truncate_pages(pools: dict, page_ids: list, start: int, end: int,
+                   page_size: int) -> dict:
+    """Page-truncate (speculative rollback, DESIGN.md §14): zero the KV at
+    logical positions [start, end) of a sequence whose block table is
+    `page_ids`. Positions past the allocation are skipped (they were
+    scattered into the sink). Zeroing — rather than relying only on the
+    pos-gated masks — restores the pool bit-exactly to its pre-speculation
+    state, so shared/CoW invariants and byte-level page comparisons hold.
+    All arguments are host values; returns updated pools.
+    """
+    out = dict(pools)
+    for b in range(start // page_size, -(-end // page_size)):
+        if b >= len(page_ids):
+            break
+        lo = max(start - b * page_size, 0)
+        hi = min(end - b * page_size, page_size)
+        if lo >= hi:
+            continue
+        pid = int(page_ids[b])
+        for k, pool in out.items():
+            out[k] = _zero_range_op(pool, pid, lo, hi)
+    return out
+
+
+def release_trailing_pages(alloc, pages: list, keep_blocks: int) -> list:
+    """Ref-release (speculative rollback): drop the references a rejected
+    suffix held past the kept block high-water mark. Returns the trimmed
+    page table; the released pages return to the allocator's free list at
+    refcount zero."""
+    keep_blocks = max(0, int(keep_blocks))
+    if keep_blocks >= len(pages):
+        return pages
+    alloc.release(pages[keep_blocks:])
+    return pages[:keep_blocks]
+
+
 def scatter_chunk_pages(pools: dict, view: dict, write_ids, block0,
                         page_size: int, n_blocks: int) -> dict:
     """Write back the pages a B=1 prefill chunk dirtied.

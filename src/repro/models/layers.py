@@ -332,12 +332,34 @@ def cache_write(cache, new, pos):
 
 
 def cache_write_chunk(cache, new, start):
-    """Write a C-token chunk's K/V at positions [start, start+C). `start` is a
-    scalar (chunked prefill is per-sequence, B=1 in the serving engine, but
-    any B works as long as all rows share the start)."""
-    return lax.dynamic_update_slice(
-        cache, new.astype(cache.dtype),
-        (0, jnp.asarray(start, jnp.int32)) + (0,) * (cache.ndim - 2))
+    """Write a C-token chunk's K/V at positions [start, start+C). `start` is
+    a scalar (chunked prefill is per-sequence: every row shares the offset)
+    or a per-row (B,) vector (batched speculative verification: each row's
+    chunk lands at its own decode position)."""
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        return lax.dynamic_update_slice(
+            cache, new.astype(cache.dtype),
+            (0, start) + (0,) * (cache.ndim - 2))
+
+    C = new.shape[1]
+
+    def one_row(c_row, n_row, s):               # (Smax, ...), (C, ...)
+        # scatter with OOB *drop*, not dynamic_update_slice: a verify chunk
+        # is fixed-width, so a row near the cache bound would otherwise have
+        # its start clamped backward, silently overwriting valid earlier KV.
+        # Real (acceptable) candidates are always in-bounds — only padding
+        # positions ever fall past the end, and those must vanish.
+        return c_row.at[s + jnp.arange(C)].set(n_row.astype(c_row.dtype),
+                                               mode="drop")
+    return jax.vmap(one_row)(cache, new, start)
+
+
+def chunk_positions(start, B: int, C: int):
+    """(B, C) query positions for a chunk at `start` (scalar or (B,))."""
+    start = jnp.asarray(start, jnp.int32)
+    pos = jnp.reshape(start, (-1, 1)) + jnp.arange(C, dtype=jnp.int32)
+    return jnp.broadcast_to(pos, (B, C))
 
 
 def attn_chunk_apply(cfg: ModelConfig, p, x, *, start, k_cache, v_cache,
@@ -350,10 +372,12 @@ def attn_chunk_apply(cfg: ModelConfig, p, x, *, start, k_cache, v_cache,
 
     x: (B, C, d). Caches (B, Smax, Hkv, hd). Returns (out, (k_cache, v_cache))
     with the chunk's K/V written into the caches (cross: caches untouched).
+    `start` may also be a per-row (B,) vector (batched speculative
+    verification: every row's chunk sits at its own decode position).
     """
     B, C, _ = x.shape
     nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q_pos = jnp.asarray(start, jnp.int32) + jnp.arange(C)
+    q_pos = chunk_positions(start, B, C)                      # (B, C)
     if cross:
         q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
         if cfg.attn_bias:
@@ -361,18 +385,17 @@ def attn_chunk_apply(cfg: ModelConfig, p, x, *, start, k_cache, v_cache,
     else:
         q, k, v = _project_qkv(cfg, p, x, lora)
         if cfg.use_rope:
-            pp = jnp.broadcast_to(q_pos[None, :], (B, C))
-            q = apply_rope(q, pp, cfg.rope_theta)
-            k = apply_rope(k, pp, cfg.rope_theta)
+            q = apply_rope(q, q_pos, cfg.rope_theta)
+            k = apply_rope(k, q_pos, cfg.rope_theta)
         k_cache = cache_write_chunk(k_cache, k, start)
         v_cache = cache_write_chunk(v_cache, v, start)
     qg = q.reshape(B, C, nkv, nq // nkv, hd)
     s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
                    preferred_element_type=jnp.float32) * (hd ** -0.5)
     kv_pos = jnp.arange(k_cache.shape[1])
-    ok = (kv_pos[None, :] <= q_pos[:, None]) if not cross else \
-        jnp.ones((C, k_cache.shape[1]), bool)
-    s = jnp.where(ok[None, None, None, :, :], s, -jnp.inf)
+    ok = (kv_pos[None, None, :] <= q_pos[:, :, None]) if not cross else \
+        jnp.ones((B, C, k_cache.shape[1]), bool)
+    s = jnp.where(ok[:, None, None, :, :], s, -jnp.inf)
     pr = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqs,bshd->bqhgd", pr.astype(v_cache.dtype), v_cache)
     out = out.reshape(B, C, nq, hd)
@@ -504,11 +527,11 @@ def mla_decode_apply(cfg: ModelConfig, p, x, *, pos, ckv_cache, krope_cache):
 def mla_chunk_apply(cfg: ModelConfig, p, x, *, start, ckv_cache, krope_cache):
     """Chunked-prefill MLA (absorbed form, same math as `mla_decode_apply`
     with C query tokens): the chunk's compressed KV is written at
-    [start, start+C) and queries attend the cache up to their own position."""
+    [start, start+C) and queries attend the cache up to their own position.
+    `start` may be a scalar or a per-row (B,) vector (batched verify)."""
     B, C, _ = x.shape
-    q_pos = jnp.asarray(start, jnp.int32) + jnp.arange(C)
-    pp = jnp.broadcast_to(q_pos[None, :], (B, C))
-    q_nope, q_rope, c_kv, k_rope = mla_project(cfg, p, x, pp)
+    q_pos = chunk_positions(start, B, C)                      # (B, C)
+    q_nope, q_rope, c_kv, k_rope = mla_project(cfg, p, x, q_pos)
     ckv_cache = cache_write_chunk(ckv_cache, c_kv, start)
     krope_cache = cache_write_chunk(krope_cache, k_rope, start)
     q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])
@@ -517,8 +540,8 @@ def mla_chunk_apply(cfg: ModelConfig, p, x, *, start, ckv_cache, krope_cache):
     s = s + jnp.einsum("bshe,bte->bhst", q_rope, krope_cache,
                        preferred_element_type=jnp.float32)
     s = s * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
-    ok = jnp.arange(ckv_cache.shape[1])[None, :] <= q_pos[:, None]    # (C, S)
-    s = jnp.where(ok[None, None, :, :], s, -jnp.inf)
+    ok = jnp.arange(ckv_cache.shape[1])[None, None, :] <= q_pos[:, :, None]
+    s = jnp.where(ok[:, None, :, :], s, -jnp.inf)
     pr = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhst,btr->bshr", pr.astype(ckv_cache.dtype), ckv_cache)
     out = jnp.einsum("bshr,rhe->bshe", ctx, p["w_uv"])

@@ -607,6 +607,165 @@ def prefill_chunk(cfg: ModelConfig, params, batch, cache, length=None, *,
     return logits, new_cache
 
 
+def verify_chunk(cfg: ModelConfig, params, batch, cache, *, constrain=None,
+                 unroll=False):
+    """Speculative-decoding verification forward (DESIGN.md §14).
+
+    Advances a decode cache through the C candidate tokens of a draft/verify
+    round — the pending token plus the drafted continuation — and, unlike
+    `prefill_chunk`, returns the logits at *every* position (the acceptance
+    test needs the greedy target after each candidate) plus per-position
+    state checkpoints so a rejected suffix can be rolled back exactly:
+
+      attention KV  — written in place at [pos, pos+C); rollback is position
+                      truncation (decode masks are pos-gated) plus the
+                      engine's page scrub, so no checkpoint is needed;
+      SSM/conv      — recurrent state cannot be truncated, so `ckpts` carries
+                      "ssm" (layer_axis, B, C, ...): the scan state after
+                      each position, and "conv" (layer_axis, B, K-1+C, ...):
+                      the raw pre-conv input history including the carried
+                      window — the state after keeping j tokens is
+                      ckpts["ssm"][:, :, j-1] / ckpts["conv"][:, :, j:j+K-1].
+
+    `cache["pos"]` may be a scalar or a per-row (B,) vector: the serving
+    engine verifies all live slots in ONE batched forward, each row's chunk
+    at its own decode position. Returns (logits (B, C, V), new_cache, ckpts).
+    Rows are independent; callers discard rows/suffixes they reject.
+    """
+    constrain = constrain or _id_constrain
+    p = _cast(params, cfg.dtype)
+    pos = cache["pos"]
+    tokens = batch["tokens"]
+    x = jnp.take(p["embed"], tokens, axis=0)
+    B, C = tokens.shape
+    x = constrain(x, "hidden")
+    start = pos
+    fam = cfg.family
+    new_cache = dict(cache)
+    ckpts = {}
+    scan = lambda f, init, xs: lax.scan(f, init, xs, unroll=unroll)
+
+    def attn_block(lp, h, kc, vc, lora=None, cross_kv=None):
+        hh = L.norm_apply(cfg, lp["attn_norm"], h)
+        a, (kc, vc) = L.attn_chunk_apply(cfg, lp["attn"], hh, start=start,
+                                         k_cache=kc, v_cache=vc, lora=lora)
+        h = h + a
+        if cross_kv is not None:
+            hh = L.norm_apply(cfg, lp["cross_norm"], h)
+            a, _ = L.attn_chunk_apply(cfg, lp["cross_attn"], hh, start=start,
+                                      k_cache=cross_kv[0], v_cache=cross_kv[1],
+                                      cross=True)
+            h = h + a
+        hh = L.norm_apply(cfg, lp["mlp_norm"], h)
+        if "moe" in lp:
+            h = h + L.moe_apply(cfg, lp["moe"], hh, constrain=constrain)
+        else:
+            h = h + L.mlp_apply(cfg, lp["mlp"], hh)
+        return h, kc, vc
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.use_mla:
+            def body(h, xs):
+                lp, ckv, kr = xs
+                hh = L.norm_apply(cfg, lp["attn_norm"], h)
+                a, (ckv, kr) = L.mla_chunk_apply(cfg, lp["attn"], hh,
+                                                 start=start, ckv_cache=ckv,
+                                                 krope_cache=kr)
+                h = h + a
+                hh = L.norm_apply(cfg, lp["mlp_norm"], h)
+                if "moe" in lp:
+                    h = h + L.moe_apply(cfg, lp["moe"], hh)
+                else:
+                    h = h + L.mlp_apply(cfg, lp["mlp"], hh)
+                return h, (ckv, kr)
+            nd = cfg.first_dense_layers
+            if fam == "moe" and nd:
+                x, (ckv_d, kr_d) = scan(
+                    body, x, (p["dense_layers"], cache["ckv"][:nd], cache["krope"][:nd]))
+                x, (ckv_m, kr_m) = scan(
+                    body, x, (p["layers"], cache["ckv"][nd:], cache["krope"][nd:]))
+                new_cache["ckv"] = jnp.concatenate([ckv_d, ckv_m], axis=0)
+                new_cache["krope"] = jnp.concatenate([kr_d, kr_m], axis=0)
+            else:
+                x, (ckv, kr) = scan(body, x, (p["layers"], cache["ckv"], cache["krope"]))
+                new_cache["ckv"], new_cache["krope"] = ckv, kr
+        else:
+            def body(h, xs):
+                lp, kc, vc = xs
+                h, kc, vc = attn_block(lp, h, kc, vc)
+                return h, (kc, vc)
+            nd = cfg.first_dense_layers if fam == "moe" else 0
+            if nd:
+                x, (k_d, v_d) = scan(body, x, (p["dense_layers"], cache["k"][:nd], cache["v"][:nd]))
+                x, (k_m, v_m) = scan(body, x, (p["layers"], cache["k"][nd:], cache["v"][nd:]))
+                new_cache["k"] = jnp.concatenate([k_d, k_m], axis=0)
+                new_cache["v"] = jnp.concatenate([v_d, v_m], axis=0)
+            else:
+                x, (k, v) = scan(body, x, (p["layers"], cache["k"], cache["v"]))
+                new_cache["k"], new_cache["v"] = k, v
+    elif fam == "ssm":
+        def body(h, xs):
+            lp, conv, st = xs
+            hh = L.norm_apply(cfg, lp["norm"], h)
+            y, hist, hs = S.mamba1_chunk_states(cfg, lp["mamba"], hh,
+                                                conv_state=conv, ssm_state=st)
+            return h + y, (hist, hs)
+        x, (hist, hs) = scan(body, x, (p["layers"], cache["conv"], cache["ssm"]))
+        new_cache["conv"] = hist[:, :, C:].astype(cache["conv"].dtype)
+        new_cache["ssm"] = hs[:, :, -1]
+        ckpts = {"conv": hist, "ssm": hs}
+    elif fam == "hybrid":
+        n_app = cfg.num_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_app, cfg.attn_every) + a.shape[1:]), p["layers"])
+        conv_r = cache["conv"].reshape((n_app, cfg.attn_every) + cache["conv"].shape[1:])
+        ssm_r = cache["ssm"].reshape((n_app, cfg.attn_every) + cache["ssm"].shape[1:])
+
+        def super_body(h, xs):
+            i, mstack, lora_i, kc, vc, conv_i, ssm_i = xs
+            shared = jax.tree.map(lambda a: a[i % cfg.n_shared_attn_blocks], p["shared_blocks"])
+            h, kc, vc = attn_block(shared, h, kc, vc, lora=lora_i)
+
+            def mamba_body(hh, ys):
+                lp, conv, st = ys
+                hn = L.norm_apply(cfg, lp["norm"], hh)
+                y, hist, hst = S.mamba2_chunk_states(cfg, lp["mamba"], hn,
+                                                     conv_state=conv,
+                                                     ssm_state=st)
+                return hh + y, (hist, hst)
+            h, (hist_i, hs_i) = scan(mamba_body, h, (mstack, conv_i, ssm_i))
+            return h, (kc, vc, hist_i, hs_i)
+
+        x, (k, v, hist, hs) = scan(
+            super_body, x,
+            (jnp.arange(n_app), stacked, p["lora"], cache["k"], cache["v"],
+             conv_r, ssm_r))
+        new_cache["k"], new_cache["v"] = k, v
+        hist = hist.reshape((cfg.num_layers,) + hist.shape[2:])
+        hs = hs.reshape((cfg.num_layers,) + hs.shape[2:])
+        new_cache["conv"] = hist[:, :, C:].astype(cache["conv"].dtype)
+        new_cache["ssm"] = hs[:, :, -1]
+        ckpts = {"conv": hist, "ssm": hs}
+    elif fam == "encdec":
+        posv = jnp.clip(L.chunk_positions(start, B, C), 0,
+                        p["dec_pos"].shape[0] - 1)
+        x = x + jnp.take(p["dec_pos"], posv, axis=0)
+
+        def body(h, xs):
+            lp, kc, vc, ck, cv = xs
+            h, kc, vc = attn_block(lp, h, kc, vc, cross_kv=(ck, cv))
+            return h, (kc, vc)
+        x, (k, v) = scan(body, x, (p["dec_layers"], cache["k"], cache["v"],
+                                   cache["ck"], cache["cv"]))
+        new_cache["k"], new_cache["v"] = k, v
+
+    x = L.norm_apply(cfg, p["final_norm"], x)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = constrain(x @ head, "logits")
+    new_cache["pos"] = pos + C
+    return logits, new_cache, ckpts
+
+
 def encode_cross_kv(cfg: ModelConfig, params, frames, *, constrain=None,
                     unroll=False):
     """Run the encoder once and project per-decoder-layer cross K/V —

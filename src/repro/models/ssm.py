@@ -102,6 +102,32 @@ def mamba1_scan_ref(x, dt, A, B_mat, C_mat, D, h0=None):
     return y.astype(x.dtype), h
 
 
+def mamba1_scan_states(x, dt, A, B_mat, C_mat, D, h0=None):
+    """`mamba1_scan_ref` that also returns the recurrent state *after every
+    position* — the mid-sequence checkpoints speculative-decoding rollback
+    needs (DESIGN.md §14). Returns (y (B,S,di), h_all (B,S,di,N) fp32);
+    h_all[:, j] equals the final state of a scan over the first j+1 tokens,
+    bit-for-bit (same step recurrence, states merely collected)."""
+    Bsz, S, di = x.shape
+    N = A.shape[-1]
+    h = jnp.zeros((Bsz, di, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        da = jnp.exp(dt_t[..., None] * A)
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, (y, h)
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C_mat, 1, 0).astype(jnp.float32))
+    _, (ys, hs) = lax.scan(step, h, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D
+    return y.astype(x.dtype), jnp.moveaxis(hs, 0, 1)
+
+
 def mamba1_apply(cfg: ModelConfig, p, x, *, ssm_kernel=None):
     x_in, z = _mamba1_ssm_inputs(cfg, p, x)
     x_conv = jax.nn.silu(causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"]))
@@ -152,6 +178,23 @@ def mamba1_chunk(cfg: ModelConfig, p, x, *, conv_state, ssm_state,
     else:
         tail = lax.dynamic_slice_in_dim(x_cat, length, K - 1, axis=1)
     return out, tail, h
+
+
+def mamba1_chunk_states(cfg: ModelConfig, p, x, *, conv_state, ssm_state):
+    """`mamba1_chunk` variant for speculative verification: every position's
+    output is needed (per-position logits) and so is every position's state
+    (rollback to an arbitrary acceptance boundary). Returns
+    (out (B,C,d), x_cat (B,K-1+C,di), h_all (B,C,di,N)): the conv window
+    after keeping j tokens is x_cat[:, j:j+K-1], the scan state h_all[:, j-1]."""
+    K = p["conv_w"].shape[0]
+    x_in, z = _mamba1_ssm_inputs(cfg, p, x)
+    x_cat = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+    xc = jax.nn.silu(
+        causal_depthwise_conv(x_cat, p["conv_w"], p["conv_b"])[:, K - 1:])
+    dt, A, B_mat, C_mat = _mamba1_scan_params(cfg, p, xc)
+    y, hs = mamba1_scan_states(xc, dt, A, B_mat, C_mat, p["D"], h0=ssm_state)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, x_cat, hs
 
 
 # ------------------------------------------------------------- mamba 2 -----
@@ -279,6 +322,56 @@ def mamba2_chunk(cfg: ModelConfig, p, x, *, conv_state, ssm_state,
     else:
         tail = lax.dynamic_slice_in_dim(x_cat, length, K - 1, axis=1)
     return y @ p["out_proj"], tail, h
+
+
+def mamba2_scan_states(x, dt, A, B_mat, C_mat, D, h0=None):
+    """Sequential Mamba2 recurrence returning per-position states — the
+    verification-path counterpart of `mamba1_scan_states`. Deliberately the
+    `mamba2_decode` step math (not the SSD matrix form): a C-token verify
+    chunk is tiny, and stepping the exact decode recurrence keeps the
+    checkpointed states bit-identical to what sequential decode would have
+    produced. x: (B,S,h,p); dt: (B,S,h); A: (h,); B/C: (B,S,N).
+    Returns (y (B,S,h,p), h_all (B,S,h,p,N) fp32)."""
+    Bsz, S, H, P = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp               # (B,h,p),(B,h),(B,N),(B,N)
+        da = jnp.exp(dt_t * A)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+        h = da[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, (y, h)
+
+    h0 = jnp.zeros((Bsz, H, P, B_mat.shape[-1]), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C_mat, 1, 0).astype(jnp.float32))
+    _, (ys, hs) = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D[:, None]
+    return y.astype(x.dtype), jnp.moveaxis(hs, 0, 1)
+
+
+def mamba2_chunk_states(cfg: ModelConfig, p, x, *, conv_state, ssm_state):
+    """`mamba2_chunk` variant for speculative verification (see
+    `mamba1_chunk_states`). Returns (out (B,C,d), x_cat (B,K-1+C,di+2N),
+    h_all (B,C,h,p,N))."""
+    B, C, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.mamba_headdim
+    K = p["conv_w"].shape[0]
+    z, xbc_raw, dt_raw = _mamba2_proj(cfg, p, x)
+    x_cat = jnp.concatenate([conv_state.astype(xbc_raw.dtype), xbc_raw], axis=1)
+    xc = jax.nn.silu(
+        causal_depthwise_conv(x_cat, p["conv_w"], p["conv_b"])[:, K - 1:])
+    x_in, B_mat, C_mat = xc[..., :di], xc[..., di:di + N], xc[..., di + N:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, hs = mamba2_scan_states(x_in.reshape(B, C, H, P), dt, A, B_mat, C_mat,
+                               p["D"], h0=ssm_state)
+    y = y.reshape(B, C, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], x_cat, hs
 
 
 def mamba2_decode(cfg: ModelConfig, p, x_t, *, conv_state, ssm_state):

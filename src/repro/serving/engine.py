@@ -27,6 +27,19 @@ Shared-prefix semantics are layout-invariant: decoded outputs are identical
 with the cache on or off and across layouts (tests/test_paged_kv.py);
 savings are reported separately (`stats["prefix_saved_tokens"]`).
 
+Speculative decoding (DESIGN.md §14): with `spec_decode=` on, decode runs
+as draft/verify rounds — a drafter (prompt-lookup n-grams or a small draft
+model, `serving/spec_decode.py`) proposes up to `spec_k` tokens per live
+slot, one batched `verify_chunk` forward scores every slot's pending token
+plus drafts at per-row positions, and the longest greedy-agreeing prefix
+plus one bonus token is emitted. Rejected suffixes roll back exactly:
+paged KV is scrubbed and speculative page refs released
+(`cache_ops.truncate_pages` / `release_trailing_pages`), SSM/conv state is
+restored from per-position checkpoints. Greedy output is byte-identical to
+plain decode for every drafter and family (tests/test_spec_decode.py);
+the economy is reported via `stats["draft_tokens"]` /
+`stats["accepted_tokens"]` / `stats["decode_steps_saved"]`.
+
 Fault tolerance: `drain_slot` evicts a request (e.g. on a simulated worker
 failure) and requeues it; the scheduler resubmits from the prompt. Retries
 are bounded by `Request.max_retries` — beyond it the request fails visibly
@@ -48,15 +61,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import (decode_step, encode_cross_kv, init_decode_cache,
-                          prefill, prefill_chunk)
+                          prefill, prefill_chunk, verify_chunk)
 from repro.models.cache_ops import (PAGE_SINK, PageAllocator,
                                     PagePoolExhausted, cache_nbytes,
                                     expand_snapshot, gather_page_views,
-                                    prefix_snapshot, scatter_chunk_pages,
-                                    scatter_token_pages, write_slot)
+                                    prefix_snapshot, release_trailing_pages,
+                                    scatter_chunk_pages,
+                                    scatter_chunk_pages_rows,
+                                    scatter_token_pages, truncate_pages,
+                                    write_slot)
 from repro.models.config import ModelConfig
 from repro.data import lm_data
 from .prefix_cache import PrefixCache
+from .spec_decode import DraftModelDrafter, PromptLookupDrafter
 
 
 @dataclass
@@ -90,6 +107,30 @@ def _pow2_at_least(n: int) -> int:
     return p
 
 
+@jax.jit
+def _restore_ckpt_rows(ssm, conv, ck_ssm, ck_conv, keeps, mask):
+    """Batched SSM/conv rollback: for every row with mask[b], replace the
+    state with the per-position checkpoint at keeps[b] kept tokens — one
+    vectorized dispatch per verify round instead of two scatters per slot.
+    ssm (L, B, ...); conv (L, B, K-1, ...); ck_ssm (L, B, C, ...);
+    ck_conv (L, B, K-1+C, ...)."""
+    km1 = conv.shape[2]
+
+    def pick_ssm(row, k):                        # (L, C, ...) -> (L, ...)
+        return jax.lax.dynamic_index_in_dim(row, k - 1, axis=1,
+                                            keepdims=False)
+
+    def pick_conv(row, k):                       # (L, K-1+C, ...) -> window
+        return jax.lax.dynamic_slice_in_dim(row, k, km1, axis=1)
+
+    new_ssm = jax.vmap(pick_ssm, in_axes=(1, 0), out_axes=1)(ck_ssm, keeps)
+    new_conv = jax.vmap(pick_conv, in_axes=(1, 0), out_axes=1)(ck_conv, keeps)
+    ms = mask.reshape((1, -1) + (1,) * (ssm.ndim - 2))
+    mc = mask.reshape((1, -1) + (1,) * (conv.ndim - 2))
+    return (jnp.where(ms, new_ssm.astype(ssm.dtype), ssm),
+            jnp.where(mc, new_conv.astype(conv.dtype), conv))
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
@@ -97,7 +138,9 @@ class ServingEngine:
                  prefix_cache: Union[bool, PrefixCache, None] = False,
                  prefix_min_len: int = 8,
                  kv_layout: str = "paged", page_size: int = 16,
-                 num_pages: Optional[int] = None, chunk_size: int = 32):
+                 num_pages: Optional[int] = None, chunk_size: int = 32,
+                 spec_decode="off", spec_k: int = 4, spec_ngram: int = 3,
+                 draft_model: Optional[tuple] = None):
         """queue_depth: optional admission-control bound on queued requests;
         ServedExtractor splits its batch rounds into windows of this size
         (None = unbounded).
@@ -109,7 +152,16 @@ class ServingEngine:
         page_size: tokens per KV page (paged layout; must divide max_len).
         num_pages: pool capacity (default (slots+4) tables' worth + sink).
         chunk_size: prompt tokens per chunked-prefill call; also the
-        bucket granularity for slab-mode prefill jit signatures."""
+        bucket granularity for slab-mode prefill jit signatures.
+        spec_decode: speculative decoding (DESIGN.md §14) — "off" (plain
+        one-token decode steps), "prompt_lookup" (n-gram drafting over the
+        request's own context), "draft" (a second small model, see
+        `draft_model`), or a custom drafter instance. Greedy output is
+        byte-identical across all settings.
+        spec_k: draft tokens per verify round (each round emits 1..k+1).
+        spec_ngram: longest n-gram the prompt-lookup drafter matches.
+        draft_model: (ModelConfig, params) of the draft model, required for
+        spec_decode="draft" (dense/moe family, same vocab)."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -133,13 +185,47 @@ class ServingEngine:
         self.active: dict = {}          # slot -> Request
         self.finished: dict = {}
         self.failed: dict = {}          # rid -> Request (retry cap exceeded)
+        self.spec_k = max(1, int(spec_k))
+        if isinstance(spec_decode, str):
+            if spec_decode not in ("off", "prompt_lookup", "draft"):
+                raise ValueError(
+                    f"spec_decode must be 'off', 'prompt_lookup', 'draft' or "
+                    f"a drafter instance, got {spec_decode!r}")
+            if spec_decode == "prompt_lookup":
+                self.drafter = PromptLookupDrafter(ngram=spec_ngram)
+            elif spec_decode == "draft":
+                if draft_model is None:
+                    raise ValueError(
+                        "spec_decode='draft' requires draft_model=(cfg, params)")
+                dcfg, dparams = draft_model
+                if dcfg.vocab_size != cfg.vocab_size:
+                    raise ValueError(
+                        f"draft vocab {dcfg.vocab_size} != target vocab "
+                        f"{cfg.vocab_size}")
+                self.drafter = DraftModelDrafter(dcfg, dparams, slots=slots,
+                                                 max_len=max_len)
+            else:
+                self.drafter = None
+        else:
+            # custom drafter instance (tests); falsy (None/False) reads as
+            # off, mirroring the prefix_cache parameter's bool convention
+            self.drafter = spec_decode or None
+            if self.drafter is not None and \
+                    not hasattr(self.drafter, "draft_round"):
+                raise ValueError(
+                    f"spec_decode instance must implement the drafter "
+                    f"protocol (draft_round/on_insert/on_free), got "
+                    f"{spec_decode!r}")
+        self.spec = self.drafter is not None
         self.stats = {"prefill_tokens": 0, "decode_steps": 0, "evictions": 0,
                       "runs": 0, "max_live": 0, "decode_slot_steps": 0,
                       "prefix_hits": 0, "prefix_saved_tokens": 0,
                       "prefix_inserts": 0, "truncations": 0, "failures": 0,
                       "prefill_invocations": 0, "prefill_chunks": 0,
                       "cow_copies": 0, "kv_bytes_peak": 0,
-                      "prefill_ctx_positions": 0}
+                      "prefill_ctx_positions": 0,
+                      "spec_rounds": 0, "draft_tokens": 0,
+                      "accepted_tokens": 0, "decode_steps_saved": 0}
 
         self.cache = init_decode_cache(cfg, slots, max_len)
         self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
@@ -148,6 +234,10 @@ class ServingEngine:
 
         self._decode = jax.jit(partial(decode_step, cfg))
         self._prefill_cache = {}
+        self._verify_slab = jax.jit(
+            lambda params, toks, cache: verify_chunk(
+                cfg, params, {"tokens": toks}, cache))
+        self._verify_fns: dict = {}
 
         if self.paged:
             assert max_len % self.page_size == 0, (
@@ -432,7 +522,10 @@ class ServingEngine:
         plen = len(prompt)
         total = self._extra + plen
         ps = self.page_size
-        cap = min(total + req.max_new, self.max_len)   # positions ever written
+        # Positions ever written: prompt + every fed generated token. With
+        # speculation on, verify rounds grow the table lazily (and roll a
+        # rejected suffix's pages back), so insert covers the prompt only.
+        cap = min(total if self.spec else total + req.max_new, self.max_len)
         blocks = -(-cap // ps) if self.alloc.pools else 0
         acquired: list = []
         state, prefix_len, pages = None, 0, []
@@ -512,6 +605,8 @@ class ServingEngine:
         req.out.append(nxt)
         self.active[slot] = req
         self._live[slot] = True
+        if self.spec:
+            self.drafter.on_insert(slot, req)
         self._note_kv_bytes()
 
     def _note_kv_bytes(self):
@@ -523,6 +618,16 @@ class ServingEngine:
         self.stats["kv_bytes_peak"] = max(self.stats["kv_bytes_peak"], used)
 
     # ------------------------------------------------------------- decode --
+
+    def _finish(self, slot: int, req: Request):
+        req.done = True
+        req.finished_s = time.time()
+        self.finished[req.rid] = req
+        del self.active[slot]
+        self._live[slot] = False
+        self._free_slot_pages(slot)
+        if self.spec:
+            self.drafter.on_free(slot)
 
     def _step(self):
         if self.paged:
@@ -550,13 +655,200 @@ class ServingEngine:
             req.out.append(tok)
             full = int(np.asarray(self.cache["pos"])[slot]) >= self.max_len - 1
             if tok == req.eos_id or len(req.out) >= req.max_new or full:
-                req.done = True
-                req.finished_s = time.time()
-                self.finished[req.rid] = req
-                del self.active[slot]
-                self._live[slot] = False
-                self._free_slot_pages(slot)
+                self._finish(slot, req)
         self._tokens = jnp.asarray(nxt[:, None], jnp.int32)
+
+    # ------------------------------------------------ speculative decode --
+
+    def _verify_fn(self, n_ctx: int):
+        """Jitted batched verify round for the paged layout: gather every
+        live row's page-table context, run `verify_chunk` over all slots at
+        once (per-row positions), scatter the dirtied blocks back. One jit
+        signature per pow2-bucketed context width, like decode."""
+        if n_ctx not in self._verify_fns:
+            cfg, ps = self.cfg, self.page_size
+            C = self.spec_k + 1
+            nb = (C + ps - 2) // ps + 1 if ps > 1 else C
+            has_pool = bool(self.alloc.pools)
+
+            def fn(params, state, pools, ctx_tab, toks, wtabs, b0s):
+                dense = dict(state)
+                if has_pool:
+                    dense.update(gather_page_views(pools, ctx_tab))
+                logits, new, ckpts = verify_chunk(cfg, params,
+                                                  {"tokens": toks}, dense)
+                new_state = {k: new[k] for k in state}
+                if has_pool:
+                    pools = scatter_chunk_pages_rows(pools, new, wtabs, b0s,
+                                                     ps, nb)
+                return logits, new_state, pools, ckpts
+            self._verify_fns[n_ctx] = (jax.jit(fn), nb)
+        return self._verify_fns[n_ctx]
+
+    def _spec_grow_pages(self, slot: int, upto: int) -> int:
+        """Lazily extend a slot's page table to cover `upto` positions for
+        this verify round (evicting LRU prefix entries under pressure).
+        Returns the number of positions that actually fit — under hard pool
+        exhaustion the round is clamped to the current allocation instead of
+        failing, as long as at least the pending token fits."""
+        ps = self.page_size
+        pages = self.slot_pages[slot]
+        need = min(-(-upto // ps), self.pages_per_slot)
+        if need > len(pages):
+            try:
+                pages += self._ensure_pages(need - len(pages), [])
+            except PagePoolExhausted:
+                if len(pages) * ps <= int(self._pos_h[slot]):
+                    raise               # not even the pending token fits
+        return min(upto, len(pages) * ps, self.max_len)
+
+    def _spec_clamp_drafts(self, live, pos_h, drafts):
+        """Clamp each live slot's drafts to its page capacity, growing
+        tables lazily. A slot whose *pending token* no longer fits (pool
+        pinned by other live slots, prefix LRU drained) is evicted back to
+        the queue via `drain_slot` — the engine's fail-visibly path, with
+        retries bounded by `Request.max_retries` — freeing its pages so the
+        other slots (and, later, the requeued request) can proceed.
+        Returns the live list minus any drained slots."""
+        kept = []
+        for s in live:
+            if self.alloc.pools:
+                try:
+                    fit = self._spec_grow_pages(s, int(pos_h[s]) + 1 +
+                                                len(drafts[s]))
+                except PagePoolExhausted:
+                    self.drain_slot(s)
+                    continue
+                drafts[s] = drafts[s][: max(fit - int(pos_h[s]) - 1, 0)]
+            kept.append(s)
+        return kept
+
+    def _spec_step(self):
+        """One speculative round (replaces `_step` when `spec_decode` is
+        on): draft up to k tokens per live slot, verify pending+drafts for
+        every slot in ONE batched `verify_chunk` forward, emit the longest
+        agreeing prefix plus the target's own next token, then roll rejected
+        suffixes back — position truncation + page scrub/ref-release for
+        attention KV, per-position state checkpoints for SSM/conv state —
+        so the engine state is exactly what plain decode would have built."""
+        C = self.spec_k + 1
+        live = [s for s in range(self.slots) if self._live[s]]
+        pos_h = (self._pos_h.astype(np.int64).copy() if self.paged else
+                 np.asarray(self.cache["pos"]).astype(np.int64).copy())
+        reqs = {s: self.active[s] for s in live}
+        k_eff = {}
+        for s in live:
+            req, p0 = self.active[s], int(pos_h[s])
+            k_eff[s] = max(0, min(self.spec_k,
+                                  req.max_new - len(req.out) - 1,
+                                  self.max_len - 1 - p0))
+        drafts = self.drafter.draft_round(reqs, k_eff)
+        for s in live:
+            drafts[s] = list(drafts.get(s) or [])[: k_eff[s]]
+        if self.paged:
+            live = self._spec_clamp_drafts(live, pos_h, drafts)
+            if not live:
+                return                   # all slots drained; run() reinserts
+        toks = np.zeros((self.slots, C), np.int64)
+        true_c = {}
+        for s in live:
+            row = [self.active[s].out[-1]] + drafts[s]
+            true_c[s] = len(row)
+            toks[s, :len(row)] = row
+
+        if self.paged:
+            ps = self.page_size
+            nb_probe = (C + ps - 2) // ps + 1 if ps > 1 else C
+            need_ctx = 1
+            for s in live:
+                p0 = int(pos_h[s])
+                need_ctx = max(need_ctx, -(-(p0 + C) // ps),
+                               p0 // ps + nb_probe)
+            n_ctx = _pow2_at_least(need_ctx)
+            fn, nb = self._verify_fn(n_ctx)
+            ctx = np.full((self.slots, n_ctx), PAGE_SINK, np.int32)
+            wtabs = np.full((self.slots, nb), PAGE_SINK, np.int32)
+            b0s = np.zeros((self.slots,), np.int32)
+            for s in live:
+                pages = self.slot_pages[s]
+                ctx[s, :min(len(pages), n_ctx)] = pages[:n_ctx]
+                b0 = min(int(pos_h[s]) // ps, n_ctx - nb)
+                b0s[s] = b0
+                for j in range(nb):
+                    b = b0 + j
+                    if b < len(pages):
+                        wtabs[s, j] = pages[b]
+            logits, new_state, self.alloc.pools, ckpts = fn(
+                self.params, self.cache, self.alloc.pools,
+                jnp.asarray(ctx), jnp.asarray(toks, jnp.int32),
+                jnp.asarray(wtabs), jnp.asarray(b0s))
+            cache = dict(self.cache)
+            cache.update(new_state)
+        else:
+            logits, cache, ckpts = self._verify_slab(
+                self.params, jnp.asarray(toks, jnp.int32), self.cache)
+            cache = dict(cache)
+
+        self.stats["decode_steps"] += 1
+        self.stats["spec_rounds"] += 1
+        self.stats["decode_slot_steps"] += len(live)
+        self.stats["max_live"] = max(self.stats["max_live"], len(live))
+
+        Y = np.asarray(jnp.argmax(logits, axis=-1))          # (slots, C)
+        new_pos = pos_h.copy()
+        nxt = np.asarray(self._tokens[:, 0]).copy()
+        keeps = np.ones((self.slots,), np.int32)
+        restore = np.zeros((self.slots,), bool)
+        for s in live:
+            req, d, p0 = self.active[s], drafts[s], int(pos_h[s])
+            m = 0
+            while m < len(d) and int(Y[s, m]) == d[m]:
+                m += 1
+            emitted = d[:m] + [int(Y[s, m])]
+            done, n_app = False, 0
+            for i, t in enumerate(emitted):
+                req.out.append(t)
+                n_app = i + 1
+                if t == req.eos_id or len(req.out) >= req.max_new or \
+                        p0 + i + 1 >= self.max_len - 1:
+                    done = True
+                    break
+            keep = n_app
+            self.stats["draft_tokens"] += len(d)
+            # count only accepted tokens actually emitted: when EOS/max_new/
+            # max_len truncates mid-prefix, the tail never reached the output
+            self.stats["accepted_tokens"] += min(m, n_app)
+            self.stats["decode_steps_saved"] += n_app - 1
+            if not done and "ssm" in ckpts:
+                keeps[s] = keep                  # batched restore below
+                restore[s] = True
+            new_pos[s] = p0 + keep
+            if done:
+                self._finish(s, req)
+            else:
+                nxt[s] = emitted[-1]
+                if self.paged and self.alloc.pools:
+                    # page-truncate + ref-release the rejected suffix
+                    pages = self.slot_pages[s]
+                    end = min(p0 + true_c[s], len(pages) * self.page_size)
+                    if p0 + keep < end:
+                        self.alloc.pools = truncate_pages(
+                            self.alloc.pools, pages, p0 + keep, end,
+                            self.page_size)
+                    self.slot_pages[s] = release_trailing_pages(
+                        self.alloc, pages, -(-(p0 + keep) // self.page_size))
+        if restore.any():
+            # mid-sequence checkpoint restore: state exactly as after
+            # sequentially decoding each row's kept tokens
+            cache["ssm"], cache["conv"] = _restore_ckpt_rows(
+                cache["ssm"], cache["conv"], ckpts["ssm"], ckpts["conv"],
+                jnp.asarray(keeps), jnp.asarray(restore))
+        cache["pos"] = jnp.asarray(new_pos, jnp.int32)
+        self.cache = cache
+        if self.paged:
+            self._pos_h = new_pos
+        self._tokens = jnp.asarray(nxt[:, None], jnp.int32)
+        self._note_kv_bytes()
 
     def drain_slot(self, slot: int):
         """Evict + requeue (straggler/failure mitigation). Retries are
@@ -566,6 +858,8 @@ class ServingEngine:
             req = self.active.pop(slot)
             self._live[slot] = False
             self._free_slot_pages(slot)
+            if self.spec:
+                self.drafter.on_free(slot)
             req.out.clear()
             req.retries += 1
             self.stats["evictions"] += 1
@@ -598,7 +892,7 @@ class ServingEngine:
                     self.queue.appendleft(req)
                     raise
             if self.active:
-                self._step()
+                self._spec_step() if self.spec else self._step()
         if self.queue or self.active:
             self.stats["truncations"] += 1
             if strict:

@@ -11,7 +11,9 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import (decode_attention_pallas,
                                             paged_decode_attention_pallas,
-                                            paged_decode_attention_ref)
+                                            paged_decode_attention_ref,
+                                            paged_verify_attention_pallas,
+                                            paged_verify_attention_ref)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gating import moe_gating_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
@@ -98,6 +100,31 @@ def test_paged_decode_attention(B, H, Hkv, D, P, ps, nb, dtype):
                        for i in range(B)])
     np.testing.assert_allclose(np.asarray(want, np.float32),
                                np.asarray(dense, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,Hkv,C,D,P,ps,nb", [
+    (2, 4, 2, 5, 64, 16, 128, 4),
+    (3, 2, 1, 3, 128, 9, 256, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_verify_attention(B, H, Hkv, C, D, P, ps, nb, dtype):
+    """Speculative-verification kernel: C candidate tokens per row attend
+    the paged KV causally from per-row start positions — must match the
+    gathered-dense causal reference (the batched-verify decode path of
+    DESIGN.md §14)."""
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    q = rand(k1, (B, H, C, D), dtype)
+    kp = rand(k2, (P, ps, Hkv, D), dtype)
+    vp = rand(k3, (P, ps, Hkv, D), dtype)
+    perm = jax.random.permutation(k4, P)[: B * nb].reshape(B, nb)
+    # per-row starts, incl. one crossing a page boundary mid-candidates
+    starts = jnp.asarray([(nb * ps * (i + 1)) // (B + 1) - C // 2
+                          for i in range(B)], jnp.int32)
+    out = paged_verify_attention_pallas(q, kp, vp, perm, starts, interpret=True)
+    want = paged_verify_attention_ref(q, kp, vp, perm, starts)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
 
 
 # --------------------------------------------------------------- topk_l2 ---

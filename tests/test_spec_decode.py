@@ -1,0 +1,466 @@
+"""Speculative decoding (DESIGN.md §14): drafters, verification, rollback.
+
+The invariant everything here leans on: greedy output is *byte-identical*
+with speculation on or off, for every drafter (including adversarial ones)
+and every model family — a drafter can only change how fast tokens appear,
+never which tokens. The rollback tests pin down the state-corruption
+failure modes: rejected KV crossing a page boundary, rejected writes into a
+CoW'd prefix boundary page, and SSM/conv recurrent state restored from
+mid-sequence checkpoints.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.ledger import CostLedger
+from repro.data import lm_data
+from repro.models import decode_step, init_params, prefill, verify_chunk
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.spec_decode import (DraftModelDrafter, PromptLookupDrafter,
+                                       prompt_lookup)
+
+QWEN = "qwen2.5-3b"
+
+
+def _cfg(arch=QWEN):
+    return get_smoke_config(arch).replace(vocab_size=lm_data.VOCAB)
+
+
+def _run(cfg, params, prompts, *, spec="off", layout="paged", pc=False,
+         max_new=8, spec_k=4, shared=0, draft=None, **kw):
+    eng = ServingEngine(cfg, params, slots=2, max_len=64, kv_layout=layout,
+                        prefix_cache=pc, prefix_min_len=4, page_size=8,
+                        chunk_size=5, spec_decode=spec, spec_k=spec_k,
+                        draft_model=draft, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=max_new, eos_id=-1,
+                           shared_len=shared))
+    done = eng.run()
+    return eng, {i: done[i].out for i in range(len(prompts))}
+
+
+class ScriptedDrafter:
+    """Test drafter proposing a fixed transform of the known true greedy
+    continuation — exact (full-k acceptance) or off-by-one (zero
+    acceptance). Exercises the protocol without a model."""
+
+    def __init__(self, truth: dict, *, corrupt: bool, vocab: int):
+        self.truth = truth          # rid -> full greedy out from an off run
+        self.corrupt = corrupt
+        self.vocab = vocab
+        self.stats = {"draft_model_steps": 0}
+
+    def on_insert(self, slot, req):
+        pass
+
+    def on_free(self, slot):
+        pass
+
+    def draft_round(self, reqs, k_eff):
+        out = {}
+        for slot, req in reqs.items():
+            cont = self.truth[req.rid][len(req.out):]
+            d = list(cont[: k_eff.get(slot, 0)])
+            if self.corrupt:
+                d = [(t + 1) % self.vocab for t in d]
+            out[slot] = d
+        return out
+
+
+# ------------------------------------------------------- unit: cache write --
+
+
+def test_cache_write_chunk_per_row_drops_out_of_bounds():
+    """A fixed-width chunk write whose tail crosses the cache end must DROP
+    the out-of-bounds positions, never clamp the window backward over valid
+    earlier KV (regression: slab verify near max_len silently overwrote the
+    prompt's K/V at positions [Smax-C, start))."""
+    from repro.models.layers import cache_write_chunk
+    cache = jnp.arange(2 * 8, dtype=jnp.float32).reshape(2, 8, 1)
+    new = -jnp.ones((2, 5, 1), jnp.float32)
+    out = np.asarray(cache_write_chunk(cache, new,
+                                       jnp.asarray([2, 6], jnp.int32)))[:, :, 0]
+    np.testing.assert_array_equal(out[0], [0, 1, -1, -1, -1, -1, -1, 7])
+    # row 1: start 6 + width 5 crosses the end — positions 0..5 untouched,
+    # 6..7 written, the 3 overflow positions dropped
+    np.testing.assert_array_equal(out[1], [8, 9, 10, 11, 12, 13, -1, -1])
+
+
+# ------------------------------------------------------------ unit: lookup --
+
+
+def test_prompt_lookup_prefers_full_continuations():
+    ctx = [1, 2, 3, 9, 9, 1, 2, 3, 4, 5, 6, 7, 1, 2, 3]
+    # trailing 3-gram (1,2,3) matches at i=0 (cont 9,9,1,2) and i=5
+    # (cont 4,5,6,7): the full-k continuation wins over recency order
+    assert prompt_lookup(ctx, 4, 3) == [4, 5, 6, 7]
+
+
+def test_prompt_lookup_shorter_than_ngram_window():
+    assert prompt_lookup([], 4, 3) == []
+    assert prompt_lookup([5], 4, 3) == []           # no proper earlier match
+    assert prompt_lookup([5, 5], 4, 3) == [5]       # 1-gram fallback
+    assert prompt_lookup([1, 2], 4, 3) == []
+
+
+def test_prompt_lookup_never_proposes_past_context():
+    ctx = [4, 4, 4]
+    assert prompt_lookup(ctx, 8, 3) == [4]          # truncated, not invented
+
+
+# ----------------------------------------------------- model: verify_chunk --
+
+
+@pytest.mark.parametrize("arch", [QWEN, "falcon-mamba-7b", "zamba2-2.7b"])
+def test_verify_chunk_matches_sequential_decode(arch):
+    """Per-position verify logits equal the sequential decode logits, and
+    the SSM/conv checkpoints at keep=j equal the state after j decode
+    steps (the rollback contract)."""
+    cfg = _cfg(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = list(np.random.RandomState(3).randint(1, 200, size=9))
+    _, cache = prefill(cfg, params, {"tokens": jnp.asarray(toks, jnp.int32)[None]}, 32)
+    cand = [5, 9, 13, 17, 21]
+    seq_cache, ref = dict(cache), []
+    mid = None
+    for j, t in enumerate(cand):
+        lg, seq_cache = decode_step(cfg, params, jnp.asarray([[t]], jnp.int32),
+                                    seq_cache)
+        ref.append(np.asarray(lg)[0, 0])
+        if j == 2:
+            mid = {k: np.asarray(v) for k, v in seq_cache.items()
+                   if k in ("conv", "ssm")}
+    vl, _, ck = verify_chunk(cfg, params,
+                             {"tokens": jnp.asarray([cand], jnp.int32)},
+                             dict(cache))
+    got = np.asarray(vl)[0]
+    np.testing.assert_allclose(got, np.stack(ref), atol=1e-5, rtol=1e-5)
+    assert (got.argmax(-1) == np.stack(ref).argmax(-1)).all()
+    if ck:                                          # ssm/hybrid families
+        keep = 3
+        np.testing.assert_allclose(np.asarray(ck["ssm"][:, :, keep - 1]),
+                                   mid["ssm"], atol=1e-6, rtol=1e-6)
+        km1 = mid["conv"].shape[2]
+        np.testing.assert_allclose(
+            np.asarray(ck["conv"][:, :, keep:keep + km1], np.float32),
+            np.asarray(mid["conv"], np.float32), atol=1e-6, rtol=1e-6)
+
+
+# ------------------------------------------------------- engine: parity -----
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "deepseek-v2-lite-16b",
+                                  "falcon-mamba-7b", "zamba2-2.7b",
+                                  "whisper-medium", "llava-next-mistral-7b"])
+def test_spec_decode_byte_identical_all_families(arch):
+    """dense / moe+MLA / ssm / hybrid / encdec / vlm: greedy output with
+    spec_decode="prompt_lookup" is byte-identical to the plain decode path,
+    with and without the prefix cache."""
+    cfg = _cfg(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shared = [7, 3, 9, 4, 2, 8, 1, 6, 5, 7, 3, 2]
+    prompts = [shared + [10 + i, 20 + i, 30 + i] for i in range(3)]
+    _, off = _run(cfg, params, prompts, spec="off", shared=len(shared))
+    e_pl, on = _run(cfg, params, prompts, spec="prompt_lookup",
+                    shared=len(shared))
+    assert off == on
+    assert e_pl.stats["spec_rounds"] == e_pl.stats["decode_steps"] > 0
+    _, off_pc = _run(cfg, params, prompts, spec="off", pc=True,
+                     shared=len(shared))
+    _, on_pc = _run(cfg, params, prompts, spec="prompt_lookup", pc=True,
+                    shared=len(shared))
+    assert off == off_pc == on_pc
+
+
+def test_spec_decode_slab_layout_byte_identical():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[7, 3, 9, 4, 2, 8, 1, 6, 5, 10 + i] for i in range(3)]
+    _, off = _run(cfg, params, prompts, spec="off", layout="slab")
+    _, on = _run(cfg, params, prompts, spec="prompt_lookup", layout="slab")
+    assert off == on
+
+
+def test_spec_decode_slab_near_max_len_does_not_clamp_writes():
+    """Regression: a fixed-width verify chunk whose padded tail crosses
+    max_len must *drop* the out-of-bounds K/V writes, not clamp the write
+    window backward over valid earlier KV (which silently corrupted the
+    prompt's cache and broke byte-identity near the bound)."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = list(range(1, 62))                    # 61 tokens, max_len 64
+    for layout in ("slab", "paged"):
+        _, off = _run(cfg, params, [prompt], spec="off", layout=layout,
+                      max_new=8)
+        _, on = _run(cfg, params, [prompt], spec="prompt_lookup",
+                     layout=layout, max_new=8)
+        assert off == on, f"near-bound divergence in {layout} layout"
+
+
+@pytest.mark.parametrize("arch", [QWEN, "falcon-mamba-7b"])
+def test_spec_decode_draft_model_byte_identical(arch):
+    """Draft-model drafting (self-draft: the target doubles as its own
+    drafter, the acceptance ceiling) — byte-identical output, near-full
+    acceptance, and materially fewer target decode invocations."""
+    cfg = _cfg(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dcfg = _cfg()                                  # dense draft for any target
+    dparams = params if arch == QWEN else init_params(dcfg, jax.random.PRNGKey(0))
+    prompts = [[7, 3, 9, 4, 2, 8, 1, 6, 5, 10 + i] for i in range(2)]
+    e_off, off = _run(cfg, params, prompts, spec="off")
+    e_dr, on = _run(cfg, params, prompts, spec="draft", draft=(dcfg, dparams))
+    assert off == on
+    assert e_dr.stats["draft_tokens"] > 0
+    assert e_dr.drafter.stats["draft_model_steps"] > 0
+    if arch == QWEN:                               # self-draft: ~all accepted
+        assert e_dr.stats["accepted_tokens"] == e_dr.stats["draft_tokens"]
+        assert e_dr.stats["decode_steps"] < e_off.stats["decode_steps"]
+
+
+def test_draft_model_family_and_vocab_validated():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ssm_cfg = _cfg("falcon-mamba-7b")
+    with pytest.raises(ValueError, match="dense/moe"):
+        ServingEngine(cfg, params, spec_decode="draft",
+                      draft_model=(ssm_cfg, params))
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(cfg, params, spec_decode="draft",
+                      draft_model=(cfg.replace(vocab_size=cfg.vocab_size + 1),
+                                   params))
+    with pytest.raises(ValueError, match="draft_model"):
+        ServingEngine(cfg, params, spec_decode="draft")
+    # falsy reads as off (the prefix_cache bool convention); a non-drafter
+    # object fails at construction, not deep inside run()
+    assert ServingEngine(cfg, params, spec_decode=False).spec is False
+    assert ServingEngine(cfg, params, spec_decode=None).spec is False
+    with pytest.raises(ValueError, match="drafter protocol"):
+        ServingEngine(cfg, params, spec_decode=object())
+
+
+# -------------------------------------------------- acceptance edge cases ---
+
+
+def _truth(cfg, params, prompts, **kw):
+    _, off = _run(cfg, params, prompts, spec="off", **kw)
+    return off
+
+
+def test_zero_acceptance_rounds_roll_back_exactly():
+    """An adversarial drafter whose every proposal is wrong: each round
+    rejects the full draft, emits exactly one token, and the rollback must
+    leave output byte-identical to plain decode."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[7, 3, 9, 4, 2, 8, 1, 6, 5, 10 + i] for i in range(2)]
+    truth = _truth(cfg, params, prompts)
+    anti = ScriptedDrafter(truth, corrupt=True, vocab=cfg.vocab_size)
+    e, on = _run(cfg, params, prompts, spec=anti)
+    assert on == truth
+    assert e.stats["draft_tokens"] > 0
+    assert e.stats["accepted_tokens"] == 0 and e.stats["decode_steps_saved"] == 0
+    # zero acceptance never does worse than one emission per round
+    assert e.stats["spec_rounds"] == max(len(o) for o in truth.values()) - 1
+
+
+def test_full_k_acceptance_saves_decode_steps():
+    """An oracle drafter proposing the true continuation: every round
+    accepts all k and emits k+1 tokens."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[7, 3, 9, 4, 2, 8, 1, 6, 5, 10 + i] for i in range(2)]
+    truth = _truth(cfg, params, prompts, max_new=11)
+    oracle = ScriptedDrafter(truth, corrupt=False, vocab=cfg.vocab_size)
+    e, on = _run(cfg, params, prompts, spec=oracle, max_new=11, spec_k=4)
+    assert on == truth
+    assert e.stats["accepted_tokens"] == e.stats["draft_tokens"] > 0
+    # 10 post-insert tokens at k=4 -> ceil(10 / 5) = 2 batched rounds for
+    # both slots, each request saving 8 single-token steps
+    assert e.stats["spec_rounds"] == 2
+    assert e.stats["decode_steps_saved"] == 16
+
+
+def test_rollback_across_page_boundary():
+    """Rejected candidates spanning a page boundary: the scrubbed pages and
+    released speculative page must leave the engine exactly on the plain
+    decode trajectory, and the pool accounting must balance."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # page_size 8, prompt 14 tokens: pos starts at 14, the k=4 verify round
+    # writes positions 14..18 -> crosses the 16-boundary into a fresh page
+    prompts = [list(range(1, 15))]
+    truth = _truth(cfg, params, prompts)
+    anti = ScriptedDrafter(truth, corrupt=True, vocab=cfg.vocab_size)
+    e, on = _run(cfg, params, prompts, spec=anti)
+    assert on == truth
+    # every page returned once the request finished
+    assert all(rc == 0 for rc in e.alloc.refcount[1:])
+    assert e.alloc.free_pages == e.alloc.num_pages - 1
+
+
+def test_rollback_of_cow_boundary_page_keeps_prefix_entry_intact():
+    """Speculative writes + rollback happen in the slot's CoW copy of a
+    prefix entry's boundary page: the entry's page bytes must stay
+    untouched so later hits replay the same prefix KV."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pc = PrefixCache(max_entries=8)
+    eng = ServingEngine(cfg, params, slots=1, max_len=64, prefix_cache=pc,
+                        prefix_min_len=4, page_size=8, chunk_size=6,
+                        spec_decode="prompt_lookup", spec_k=4)
+    shared = [7, 3, 9, 4, 2, 8, 1, 6, 5, 7]       # 10 tokens: tail page busy
+    eng.submit(Request(rid=0, prompt=shared + [11, 12], max_new=3, eos_id=-1,
+                       shared_len=len(shared)))
+    eng.run()
+    (entry,) = pc._entries.values()
+    assert entry.tail_page is not None
+    key = next(iter(eng.alloc.pools))
+    before = np.asarray(eng.alloc.pools[key][:, entry.tail_page]).copy()
+    for rid, tail in ((1, [21, 22]), (2, [31, 32, 33])):
+        eng.submit(Request(rid=rid, prompt=shared + tail, max_new=6,
+                           eos_id=-1, shared_len=len(shared)))
+    done = eng.run()
+    after = np.asarray(eng.alloc.pools[key][:, entry.tail_page])
+    np.testing.assert_array_equal(before, after)
+    assert eng.stats["prefix_hits"] == 2
+    # and the decoded outputs equal a cold non-speculative engine's
+    eng2 = ServingEngine(cfg, params, slots=1, max_len=64, prefix_cache=False,
+                         page_size=8, chunk_size=6)
+    for rid, tail in ((1, [21, 22]), (2, [31, 32, 33])):
+        eng2.submit(Request(rid=rid, prompt=shared + tail, max_new=6,
+                            eos_id=-1, shared_len=len(shared)))
+    done2 = eng2.run()
+    assert {r: done[r].out for r in (1, 2)} == \
+        {r: done2[r].out for r in (1, 2)}
+
+
+def test_pool_exhaustion_mid_spec_drains_slot_not_strands_it():
+    """Speculative engines reserve prompt-only pages at insert and grow
+    lazily, so the pool can pin mid-decode. The starved slot must be
+    evicted back to the queue (bounded retries, fail-visibly contract) and
+    every request must still finish with plain-decode output."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[7, 3, 9, 4, 2, 8][:6], [1, 6, 5, 11, 4, 9][:6]]
+    # ample pool: the reference outputs
+    _, want = _run(cfg, params, prompts, spec="prompt_lookup", max_new=8)
+    # page_size 8, 6-token prompts -> 1 page each at insert, 2 over a
+    # lifetime; a pool of 3 usable pages forces the slots to contend for
+    # the third page the moment both verify rounds cross the boundary
+    eng = ServingEngine(cfg, params, slots=2, max_len=32, page_size=8,
+                        chunk_size=5, num_pages=4, prefix_cache=False,
+                        spec_decode="prompt_lookup", spec_k=4)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=8, eos_id=-1,
+                           max_retries=50))
+    done = eng.run()
+    assert {i: done[i].out for i in range(2)} == want
+    assert eng.stats["evictions"] >= 1 and not eng.failed
+    assert all(rc == 0 for rc in eng.alloc.refcount[1:])
+
+
+def test_prompt_lookup_on_prompt_shorter_than_ngram_window():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[5], [9, 9]]
+    _, off = _run(cfg, params, prompts, spec="off")
+    _, on = _run(cfg, params, prompts, spec="prompt_lookup")
+    assert off == on
+
+
+def test_eos_inside_accepted_draft_stops_exactly_like_plain_decode():
+    """If the true continuation hits EOS inside an accepted draft, the
+    request must finish with the same output as plain decode."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[7, 3, 9, 4, 2, 8, 1, 6, 5, 11]]
+    base = _truth(cfg, params, prompts, max_new=10)
+    eos = base[0][4]                               # 5th generated token
+    eng_off = ServingEngine(cfg, params, slots=1, max_len=64)
+    eng_off.submit(Request(rid=0, prompt=prompts[0], max_new=10, eos_id=eos))
+    off = eng_off.run()[0].out
+    oracle = ScriptedDrafter(base, corrupt=False, vocab=cfg.vocab_size)
+    eng_on = ServingEngine(cfg, params, slots=1, max_len=64,
+                           spec_decode=oracle, spec_k=4)
+    eng_on.submit(Request(rid=0, prompt=prompts[0], max_new=10, eos_id=eos))
+    on = eng_on.run()[0].out
+    assert on == off and on[-1] == eos
+
+
+# ------------------------------------------------------ drafter internals ---
+
+
+def test_draft_model_drafter_resyncs_after_rejection():
+    """The draft cache realigns to the target's kept history by common
+    prefix: after a full rejection its fed history must shrink back, after
+    full acceptance it must lag by exactly the last draft token."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    d = DraftModelDrafter(cfg, params, slots=1, max_len=64)
+    req = Request(rid=0, prompt=[7, 3, 9, 4, 2], max_new=8, eos_id=-1)
+    d.on_insert(0, req)
+    assert d._hist[0] == [7, 3, 9, 4, 2]
+    req.out = [11]
+    props = d.draft_round({0: req}, {0: 3})[0]
+    assert len(props) == 3
+    assert d._hist[0] == [7, 3, 9, 4, 2, 11] + props[:2]
+    # target rejected everything: out grew by the corrected token only
+    req.out = [11, 40]
+    d.draft_round({0: req}, {0: 3})
+    assert d._hist[0][:7] == [7, 3, 9, 4, 2, 11, 40]
+    d.on_free(0)
+    assert d._hist[0] == []
+
+
+def test_prompt_lookup_drafter_respects_k_eff():
+    pld = PromptLookupDrafter(ngram=3)
+    req = Request(rid=0, prompt=[1, 2, 3, 4, 1, 2, 3], max_new=8, eos_id=-1)
+    req.out = [4]                                  # context ends ...,1,2,3,4
+    out = pld.draft_round({0: req}, {0: 2})
+    assert out[0] == [1, 2]                        # capped at k_eff
+    assert pld.draft_round({0: req}, {0: 0})[0] == []
+
+
+# ------------------------------------------------------ stats / plumbing ----
+
+
+def test_spec_stats_flow_through_served_extractor_and_ledger():
+    from repro.core.scheduler import BatchScheduler
+    from repro.data.corpus import make_swde_corpus
+    from repro.extract.served import ServedExtractor
+    from repro.index.retriever import TwoLevelRetriever
+
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    corpus = make_swde_corpus()
+    docs = sorted(corpus.tables["universities"])[:2]
+    items = [(d, a, "universities") for d in docs
+             for a in ("tuition", "enrollment")]
+
+    def run(spec):
+        engine = ServingEngine(cfg, params, slots=2, max_len=1024,
+                               prefix_cache=True, spec_decode=spec, spec_k=4)
+        extractor = ServedExtractor(corpus, engine, max_new=16)
+        ledger = CostLedger()
+        sched = BatchScheduler(TwoLevelRetriever(corpus, mode="rag_topk"),
+                               extractor, ledger, {}, batch_size=2)
+        rows = sched.extract_many(items)
+        return rows, engine, extractor, ledger
+
+    rows_off, e_off, _, led_off = run("off")
+    rows_on, e_on, ex_on, led_on = run("prompt_lookup")
+    assert rows_on == rows_off
+    # token columns are speculation-invariant; savings reported apart
+    for col in ("input_tokens", "output_tokens", "total_tokens", "per_phase"):
+        assert led_on.snapshot()[col] == led_off.snapshot()[col]
+    assert e_on.stats["draft_tokens"] > 0
+    assert ex_on.stats.draft_tokens == e_on.stats["draft_tokens"]
+    assert ex_on.stats.accepted_tokens == e_on.stats["accepted_tokens"]
+    assert led_on.draft_tokens == e_on.stats["draft_tokens"]
+    assert led_on.decode_steps_saved == e_on.stats["decode_steps_saved"]
+    snap = led_on.snapshot()
+    assert {"draft_tokens", "accepted_tokens",
+            "decode_steps_saved"} <= set(snap)
