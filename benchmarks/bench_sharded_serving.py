@@ -1,0 +1,198 @@
+"""Sharded serving: DP replica scaling and TP-mesh parity on the extraction
+workload (DESIGN.md §15).
+
+Workload: the scheduler-shaped batch of (doc, attr) extraction needs a QUEST
+plan emits over the synthetic SWDE corpus, served through three paths that
+must return byte-identical result rows and identical ledger token columns:
+
+  single — one `ServingEngine` (paged KV + prefix cache), the baseline;
+  dp2    — `ReplicaGroup(replicas=2)`: two engines behind one shared
+           admission queue, shared prefix cache and shared KV page pool;
+  mesh   — one engine on a (1, 2) tensor-parallel CPU mesh (the module
+           forces 4 host devices before jax initializes).
+
+The DP contract is *aggregate throughput at unchanged rows*. In-process
+replicas interleave on one host thread, so wall-clock cannot show the win;
+the clock unit is a **round** — one target-model invocation (a decode step
+or a prefill call), which is what a deployment's step latency is made of.
+A replica group's elapsed rounds are the max over its replicas (they run
+concurrently in a deployment); `dp2_speedup = rounds_single /
+max_replica_rounds` and the gate is >= 1.5x with 2 replicas, i.e. the
+shared queue keeps both replicas fed instead of serializing behind one.
+Aggregate tokens-per-round is reported alongside (same ratio: the token
+totals are identical by the rows invariant).
+
+The mesh path must be invisible in every counter: identical rows AND
+identical engine stats to `single` — sharding is a layout change only.
+
+Emits `benchmarks/out/BENCH_sharded_serving.json` (gated against the
+committed baseline by `benchmarks/compare.py` in CI) plus a CSV of the
+three paths. `--smoke` runs the reduced CI-sized workload.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import time
+from pathlib import Path
+
+# must precede the jax import: device count is fixed at backend init
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=4").strip()
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.ledger import CostLedger
+from repro.core.scheduler import BatchScheduler
+from repro.data import lm_data
+from repro.data.corpus import make_swde_corpus
+from repro.extract.served import ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.launch.mesh import make_serving_mesh
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+from repro.serving.replicas import ReplicaGroup
+
+OUT = Path(__file__).parent / "out"
+ATTRS = ["tuition", "enrollment", "university_name"]
+MAX_NEW = 32
+SLOTS = 4
+
+ENGINE_KW = dict(slots=SLOTS, max_len=1024, prefix_cache=True,
+                 kv_layout="paged")
+
+# stats columns the mesh path must reproduce exactly (layout invisibility)
+STAT_KEYS = ("prefill_tokens", "prefill_invocations", "decode_steps",
+             "decode_slot_steps", "prefix_hits", "prefix_saved_tokens",
+             "prefix_inserts")
+
+
+def _items(corpus, n_docs: int):
+    docs = sorted(corpus.tables["universities"])[:n_docs]
+    return [(d, a, "universities") for d in docs for a in ATTRS]
+
+
+def _rounds(stats: dict) -> int:
+    """One round = one target-model invocation (decode step or prefill
+    call) — the bench's clock unit; see the module docstring."""
+    return stats["decode_steps"] + stats["prefill_invocations"]
+
+
+def _run_path(corpus, items, engine, *, batch: int):
+    extractor = ServedExtractor(corpus, engine, max_new=MAX_NEW)
+    ledger = CostLedger()
+    retriever = TwoLevelRetriever(corpus, mode="rag_topk")
+    sched = BatchScheduler(retriever, extractor, ledger, {}, batch_size=batch)
+    t0 = time.time()
+    rows = sched.extract_many(items)
+    return rows, time.time() - t0, ledger.snapshot()
+
+
+def run(quick: bool = False, smoke: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = quick or smoke
+    corpus = make_swde_corpus()
+    items = _items(corpus, 4 if small else 12)
+    batch = 2 * SLOTS                      # fills both dp2 replicas per round
+
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    single = ServingEngine(cfg, params, **ENGINE_KW)
+    rows_s, wall_s, led_s = _run_path(corpus, items, single, batch=batch)
+
+    grp = ReplicaGroup(cfg, params, replicas=2, **ENGINE_KW)
+    rows_d, wall_d, led_d = _run_path(corpus, items, grp, batch=batch)
+
+    mesh_eng = ServingEngine(cfg, params, mesh=make_serving_mesh((1, 2)),
+                             **ENGINE_KW)
+    rows_m, wall_m, led_m = _run_path(corpus, items, mesh_eng, batch=batch)
+
+    dp2_rows_identical = rows_d == rows_s
+    mesh_rows_identical = rows_m == rows_s
+    ledger_identical = all(
+        led[c] == led_s[c]
+        for led in (led_d, led_m)
+        for c in ("input_tokens", "output_tokens", "total_tokens", "per_phase"))
+    mesh_stats_identical = all(
+        mesh_eng.stats[k] == single.stats[k] for k in STAT_KEYS)
+
+    rounds_single = _rounds(single.stats)
+    per_replica = [_rounds(e.stats) for e in grp.engines]
+    rounds_dp2_max = max(per_replica)
+    dp2_speedup = rounds_single / max(rounds_dp2_max, 1)
+    dp2_balance = min(per_replica) / max(rounds_dp2_max, 1)
+    gen_tokens = led_s["output_tokens"]
+    tpr_single = gen_tokens / max(rounds_single, 1)
+    tpr_dp2 = gen_tokens / max(rounds_dp2_max, 1)
+
+    result = {
+        "bench": "sharded_serving",
+        "smoke": bool(small),
+        "items": len(items),
+        "slots": SLOTS,
+        "replicas": 2,
+        "mesh_shape": "1x2",
+        "max_new": MAX_NEW,
+        "dp2_rows_identical": dp2_rows_identical,
+        "mesh_rows_identical": mesh_rows_identical,
+        "ledger_token_columns_identical": ledger_identical,
+        "mesh_stats_identical": mesh_stats_identical,
+        "rounds_single": rounds_single,
+        "rounds_dp2_max": rounds_dp2_max,
+        "rounds_dp2_per_replica": per_replica,
+        "dp2_speedup": round(dp2_speedup, 4),
+        "dp2_balance": round(dp2_balance, 4),
+        "tokens_per_round_single": round(tpr_single, 4),
+        "tokens_per_round_dp2": round(tpr_dp2, 4),
+        "decode_steps_single": single.stats["decode_steps"],
+        "decode_steps_mesh": mesh_eng.stats["decode_steps"],
+        "prefix_hits_dp2": grp.stats["prefix_hits"],
+        "prefix_inserts_dp2": grp.stats["prefix_inserts"],
+        "wall_single_s": round(wall_s, 3),
+        "wall_dp2_s": round(wall_d, 3),
+        "wall_mesh_s": round(wall_m, 3),
+    }
+    with open(OUT / "BENCH_sharded_serving.json", "w") as f:
+        json.dump(result, f, indent=2)
+    with open(OUT / "sharded_serving.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["path", "rounds", "tokens_per_round", "wall_s"])
+        w.writerow(["single", rounds_single, f"{tpr_single:.3f}",
+                    f"{wall_s:.3f}"])
+        w.writerow(["dp2", rounds_dp2_max, f"{tpr_dp2:.3f}", f"{wall_d:.3f}"])
+        w.writerow(["mesh_1x2", _rounds(mesh_eng.stats), f"{tpr_single:.3f}",
+                    f"{wall_m:.3f}"])
+
+    print(f"sharded_serving: {len(items)} extractions @ {SLOTS} slots | "
+          f"rows identical: dp2 {dp2_rows_identical}, mesh "
+          f"{mesh_rows_identical} | rounds single {rounds_single} -> dp2 "
+          f"max-replica {rounds_dp2_max} ({dp2_speedup:.2f}x aggregate, "
+          f"balance {dp2_balance:.2f}) | tokens/round {tpr_single:.2f} -> "
+          f"{tpr_dp2:.2f} | wall {wall_s:.2f}s / {wall_d:.2f}s / "
+          f"{wall_m:.2f}s")
+
+    assert dp2_rows_identical, "replica group changed result rows"
+    assert mesh_rows_identical, "mesh engine changed result rows"
+    assert ledger_identical, "replica/mesh serving leaked into ledger columns"
+    assert mesh_stats_identical, (
+        "mesh engine's counters diverged from single-device: "
+        + str({k: (mesh_eng.stats[k], single.stats[k]) for k in STAT_KEYS}))
+    assert dp2_speedup >= 1.5, (
+        f"2-replica aggregate speedup {dp2_speedup:.2f}x below the 1.5x bar "
+        f"(per-replica rounds {per_replica} vs single {rounds_single})")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

@@ -70,6 +70,21 @@ SPECS = {
         # is the deterministic invocation counters above.
         "wall": [],
     },
+    "sharded_serving": {
+        "invariants": ["dp2_rows_identical", "mesh_rows_identical",
+                       "ledger_token_columns_identical",
+                       "mesh_stats_identical"],
+        "metrics": [("dp2_speedup", "higher"),
+                    ("dp2_balance", "higher"),
+                    ("rounds_dp2_max", "lower"),
+                    ("tokens_per_round_dp2", "higher"),
+                    ("decode_steps_mesh", "lower")],
+        # in-process replicas interleave on one host thread and the CPU
+        # mesh adds collective overhead to a tiny model: wall-clock cannot
+        # show the win here. The DP contract is counter-gated (rounds =
+        # target-model invocations, the deployment clock unit).
+        "wall": [],
+    },
 }
 
 

@@ -15,21 +15,48 @@ tokens per target invocation at byte-identical output — the acceptance
 rate and decode steps saved are printed with the engine stats.
 
 Uses the arch's reduced (smoke) config so it runs on CPU; on TPU pass
---full to serve the full config on the production mesh.
+--full to serve the full config on the production mesh. `--mesh-shape
+1x2` serves one TP/FSDP-sharded engine on a device mesh (DESIGN.md §15;
+on CPU the devices are forced via XLA_FLAGS before jax initializes) and
+`--replicas 2` runs data-parallel engines behind one shared admission
+queue — rows are byte-identical either way.
 """
 import argparse
+import os
+import sys
 import time
 
-import jax
 
-from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import Filter, Query, Session, conj
-from repro.data import lm_data
-from repro.data.corpus import make_swde_corpus
-from repro.extract.served import ServedExtractor
-from repro.index.retriever import TwoLevelRetriever
-from repro.models import init_params
-from repro.serving.engine import ServingEngine
+def _force_cpu_devices_for_mesh(argv) -> None:
+    # XLA only honours the forced host-device count if it's set before jax
+    # initializes, so this must run ahead of `import jax` when the user
+    # asks for a mesh on a single-device host.
+    if "--mesh-shape" not in argv:
+        return
+    spec = argv[argv.index("--mesh-shape") + 1]
+    need = 1
+    for part in spec.replace(",", "x").split("x"):
+        need *= int(part)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if need > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={need}".strip())
+
+
+_force_cpu_devices_for_mesh(sys.argv)
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config  # noqa: E402
+from repro.core import Filter, Query, Session, conj  # noqa: E402
+from repro.data import lm_data  # noqa: E402
+from repro.data.corpus import make_swde_corpus  # noqa: E402
+from repro.extract.served import ServedExtractor  # noqa: E402
+from repro.index.retriever import TwoLevelRetriever  # noqa: E402
+from repro.launch.mesh import make_serving_mesh, parse_mesh_shape  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving.engine import ServingEngine  # noqa: E402
+from repro.serving.replicas import ReplicaGroup  # noqa: E402
 
 
 def main():
@@ -44,6 +71,12 @@ def main():
     ap.add_argument("--spec-decode", default="prompt_lookup",
                     choices=["off", "prompt_lookup"],
                     help="speculative decoding drafter (DESIGN.md §14)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="serve on a (data, model) device mesh, e.g. 1x2 "
+                         "(DESIGN.md §15; forces CPU devices if needed)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind one shared "
+                         "queue (DESIGN.md §15)")
     args = ap.parse_args()
 
     cfg = (get_config if args.full else get_smoke_config)(args.arch)
@@ -51,9 +84,20 @@ def main():
     print(f"serving {cfg.name} ({cfg.family}), d_model={cfg.d_model}, "
           f"layers={cfg.num_layers}")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, slots=args.slots, max_len=1024,
-                           prefix_cache=not args.no_prefix_cache,
-                           spec_decode=args.spec_decode)
+    mesh = None
+    if args.mesh_shape is not None:
+        mesh = make_serving_mesh(parse_mesh_shape(args.mesh_shape))
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    if args.replicas > 1:
+        engine = ReplicaGroup(cfg, params, replicas=args.replicas,
+                              slots=args.slots, max_len=1024,
+                              prefix_cache=not args.no_prefix_cache,
+                              spec_decode=args.spec_decode, mesh=mesh)
+        print(f"{args.replicas} engine replicas behind one shared queue")
+    else:
+        engine = ServingEngine(cfg, params, slots=args.slots, max_len=1024,
+                               prefix_cache=not args.no_prefix_cache,
+                               spec_decode=args.spec_decode, mesh=mesh)
 
     corpus = make_swde_corpus()
     retriever = TwoLevelRetriever(corpus)

@@ -247,6 +247,29 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh, batch_size: int):
         treedef, [spec(p, l) for p, l in flat])
 
 
+def pool_specs(pools: dict, mesh) -> dict:
+    """Paged-KV pool specs (DESIGN.md §15): page tables are host-local
+    integers, so the page axis (axis 1) always replicates — a page id must
+    dereference the same physical page on every device. The per-position
+    feature axes shard over `model` where divisible: attention heads for
+    k/v, the latent/rope rank for MLA's ckv/krope. Shapes are
+    (layer_axis, num_pages, page_size, *tail)."""
+    msz = mesh.shape[TP] if TP in mesh.axis_names else 1
+    specs = {}
+    for name, a in pools.items():
+        tail = a.shape[3:]
+        spec = [None, None, None]
+        for i, dim in enumerate(tail):
+            # shard the first tail dim that divides (heads for k/v, rank
+            # for ckv/krope); everything after it replicates
+            if i == 0 and dim % msz == 0 and dim >= msz:
+                spec.append(TP)
+            else:
+                spec.append(None)
+        specs[name] = P(*spec)
+    return specs
+
+
 def to_shardings(mesh, specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -24,6 +24,35 @@ def make_test_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = False
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def parse_mesh_shape(spec) -> tuple:
+    """"2x2" / "1,4" / (2, 2) -> (n_data, n_model)."""
+    if isinstance(spec, (tuple, list)):
+        shape = tuple(int(x) for x in spec)
+    else:
+        shape = tuple(int(x) for x in str(spec).replace(",", "x").split("x"))
+    if len(shape) != 2 or min(shape) < 1:
+        raise ValueError(f"mesh shape must be (n_data, n_model), got {spec!r}")
+    return shape
+
+
+def make_serving_mesh(shape=(1, 2)):
+    """Serving mesh with axes (data, model) — `data` carries engine-replica /
+    slot batch parallelism, `model` tensor parallelism (DESIGN.md §15).
+    Works on CPU meshes for CI; fails with the XLA_FLAGS recipe when the
+    process has fewer devices than the shape needs (the flag must be set
+    before jax initializes, so it cannot be applied retroactively here)."""
+    n_data, n_model = parse_mesh_shape(shape)
+    need = n_data * n_model
+    have = len(jax.devices())
+    if have < need:
+        raise RuntimeError(
+            f"mesh shape {(n_data, n_model)} needs {need} devices, found "
+            f"{have}; on CPU launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} (must be set "
+            f"before jax initializes)")
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
 def batch_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -126,6 +126,15 @@ class PageAllocator:
         self.refcount = [0] * self.num_pages
         self._free = list(range(self.num_pages - 1, 0, -1))  # sink excluded
 
+    def shard_pools(self, mesh) -> None:
+        """Lay the device pools out over a serving mesh (DESIGN.md §15):
+        pages replicated (host-local page ids must dereference identically
+        on every device), heads/features over the `model` axis. Call once,
+        right after construction — page contents are preserved."""
+        from repro.distributed.sharding import pool_specs, to_shardings
+        self.pools = jax.device_put(
+            self.pools, to_shardings(mesh, pool_specs(self.pools, mesh)))
+
     # ------------------------------------------------------------ queries --
 
     @property

@@ -40,6 +40,19 @@ plain decode for every drafter and family (tests/test_spec_decode.py);
 the economy is reported via `stats["draft_tokens"]` /
 `stats["accepted_tokens"]` / `stats["decode_steps_saved"]`.
 
+Mesh-aware serving (DESIGN.md §15): with `mesh=` set (a (data, model) mesh
+from `launch/mesh.py`, CPU meshes supported for CI), the engine runs every
+phase multi-device: params are laid out with the FSDP+TP rules of
+`distributed/sharding.py`, the decode cache shards its slot axis over
+`data` and heads/features over `model`, and the paged KV pool shards pages
+replicated / heads over `model` (page tables stay host-local integers).
+The jitted phases — chunked prefill, paged decode, and spec-decode verify —
+thread the mesh's activation-constraint hook through the model and pin
+their cache/pool outputs to explicit PartitionSpecs, so the layout is
+stable across steps. Decoded rows are byte-identical to the single-device
+engine (tests/test_sharded_serving.py). Data-parallel *replica* scaling on
+top of one engine lives in `serving/replicas.py`.
+
 Fault tolerance: `drain_slot` evicts a request (e.g. on a simulated worker
 failure) and requeues it; the scheduler resubmits from the prompt. Retries
 are bounded by `Request.max_retries` — beyond it the request fails visibly
@@ -59,7 +72,11 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
+from repro.distributed.sharding import (cache_specs, make_constrain,
+                                        param_shardings, pool_specs,
+                                        to_shardings)
 from repro.models import (decode_step, encode_cross_kv, init_decode_cache,
                           prefill, prefill_chunk, verify_chunk)
 from repro.models.cache_ops import (PAGE_SINK, PageAllocator,
@@ -140,7 +157,8 @@ class ServingEngine:
                  kv_layout: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None, chunk_size: int = 32,
                  spec_decode="off", spec_k: int = 4, spec_ngram: int = 3,
-                 draft_model: Optional[tuple] = None):
+                 draft_model: Optional[tuple] = None, mesh=None,
+                 page_allocator: Optional[PageAllocator] = None):
         """queue_depth: optional admission-control bound on queued requests;
         ServedExtractor splits its batch rounds into windows of this size
         (None = unbounded).
@@ -161,8 +179,25 @@ class ServingEngine:
         spec_k: draft tokens per verify round (each round emits 1..k+1).
         spec_ngram: longest n-gram the prompt-lookup drafter matches.
         draft_model: (ModelConfig, params) of the draft model, required for
-        spec_decode="draft" (dense/moe family, same vocab)."""
+        spec_decode="draft" (dense/moe family, same vocab).
+        mesh: optional (data, model) jax Mesh (see `launch/mesh.py`) — run
+        the engine multi-device with FSDP+TP-sharded params, sharded decode
+        cache / paged KV pool, and mesh-constrained jitted phases (DESIGN.md
+        §15). Rows stay byte-identical to the single-device engine.
+        page_allocator: an existing PageAllocator to use instead of
+        constructing one — `serving/replicas.py` shares a pool (and with it
+        the prefix-cache page references) across engine replicas."""
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # FSDP+TP parameter layout; a no-op when `params` already
+            # carries these shardings (replica groups pre-shard once)
+            params = jax.device_put(params, param_shardings(cfg, params, mesh))
+            self._constrain = make_constrain(mesh, slots)      # batched phases
+            self._constrain1 = make_constrain(mesh, 1)         # B=1 prefill
+        else:
+            self._constrain = self._constrain1 = None
+        self._cache_pspecs = self._pool_pspecs = None
         self.params = params
         self.slots = slots
         self.max_len = max_len
@@ -203,7 +238,7 @@ class ServingEngine:
                         f"draft vocab {dcfg.vocab_size} != target vocab "
                         f"{cfg.vocab_size}")
                 self.drafter = DraftModelDrafter(dcfg, dparams, slots=slots,
-                                                 max_len=max_len)
+                                                 max_len=max_len, mesh=mesh)
             else:
                 self.drafter = None
         else:
@@ -232,20 +267,41 @@ class ServingEngine:
         self._live = np.zeros((slots,), bool)
         self._tokens = jnp.zeros((slots, 1), jnp.int32)
 
-        self._decode = jax.jit(partial(decode_step, cfg))
+        def _dec(params, tokens, cache):
+            # full-batch decode gets the batched constrain hook + sticky
+            # cache specs; B=1 sub-cache suffix prefill (slab) the B=1 hook
+            full = tokens.shape[0] == self.slots
+            logits, new = decode_step(
+                cfg, params, tokens, cache,
+                constrain=self._constrain if full else self._constrain1)
+            if full:
+                new = self._with_specs(new, self._cache_pspecs)
+            return logits, new
+        self._decode = jax.jit(_dec)
         self._prefill_cache = {}
-        self._verify_slab = jax.jit(
-            lambda params, toks, cache: verify_chunk(
-                cfg, params, {"tokens": toks}, cache))
+
+        def _vslab(params, toks, cache):
+            logits, new, ckpts = verify_chunk(cfg, params, {"tokens": toks},
+                                              cache, constrain=self._constrain)
+            return logits, self._with_specs(new, self._cache_pspecs), ckpts
+        self._verify_slab = jax.jit(_vslab)
         self._verify_fns: dict = {}
 
         if self.paged:
             assert max_len % self.page_size == 0, (
                 f"max_len={max_len} must be a multiple of page_size={page_size}")
             self.pages_per_slot = max_len // self.page_size
-            if num_pages is None:
-                num_pages = (slots + 4) * self.pages_per_slot + 1
-            self.alloc = PageAllocator(cfg, num_pages, self.page_size)
+            if page_allocator is not None:
+                assert page_allocator.page_size == self.page_size, (
+                    f"shared allocator page_size={page_allocator.page_size} "
+                    f"!= engine page_size={self.page_size}")
+                self.alloc = page_allocator   # shared pool: replica groups
+            else:
+                if num_pages is None:
+                    num_pages = (slots + 4) * self.pages_per_slot + 1
+                self.alloc = PageAllocator(cfg, num_pages, self.page_size)
+                if mesh is not None:
+                    self.alloc.shard_pools(mesh)
             for k in self.alloc.pools:   # length-indexed KV lives in the pool
                 del self.cache[k]
             self.slot_pages: list = [[] for _ in range(slots)]
@@ -253,6 +309,27 @@ class ServingEngine:
             self._chunk_fns: dict = {}
             self._paged_decode = jax.jit(self._make_paged_decode())
             self._cross_kv = None                         # encdec, computed once
+
+        if mesh is not None:
+            # sticky layouts for the state that persists across steps: the
+            # jitted phases re-pin their cache/pool outputs to these specs
+            self._cache_pspecs = cache_specs(cfg, self.cache, mesh, slots)
+            self.cache = jax.device_put(
+                self.cache, to_shardings(mesh, self._cache_pspecs))
+            if self.paged:
+                self._pool_pspecs = pool_specs(self.alloc.pools, mesh)
+
+    def _with_specs(self, tree: dict, pspecs) -> dict:
+        """Pin a cache/pool pytree's leaves to the engine's mesh specs
+        (jit-traceable `with_sharding_constraint`); identity off-mesh."""
+        if self.mesh is None or pspecs is None:
+            return tree
+        out = dict(tree)
+        for k, spec in pspecs.items():
+            if k in out:
+                out[k] = jax.lax.with_sharding_constraint(
+                    out[k], NamedSharding(self.mesh, spec))
+        return out
 
     # ------------------------------------------------------------ intake --
 
@@ -288,7 +365,8 @@ class ServingEngine:
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_cache:
             self._prefill_cache[bucket] = jax.jit(
-                partial(prefill, self.cfg, max_len=self.max_len))
+                partial(prefill, self.cfg, max_len=self.max_len,
+                        constrain=self._constrain1))
         return self._prefill_cache[bucket]
 
     def _prefill_sub(self, tokens: list):
@@ -382,12 +460,14 @@ class ServingEngine:
         def step(params, tokens, state, pools, table, write_ids):
             dense = dict(state)
             dense.update(gather_page_views(pools, table))
-            logits, new = decode_step(cfg, params, tokens, dense)
+            logits, new = decode_step(cfg, params, tokens, dense,
+                                      constrain=self._constrain)
             new_state = {k: new[k] for k in state}
             if pools:
                 starts = (state["pos"] // ps) * ps
                 pools = scatter_token_pages(pools, new, write_ids, starts, ps)
-            return logits, new_state, pools
+            return (logits, self._with_specs(new_state, self._cache_pspecs),
+                    self._with_specs(pools, self._pool_pspecs))
         return step
 
     def _chunk_fn(self, n_ctx: int, nb: int, with_images: bool):
@@ -406,11 +486,13 @@ class ServingEngine:
                 if has_pool:
                     dense.update(gather_page_views(pools, ctx_ids[None, :]))
                 logits, new = prefill_chunk(cfg, params, batch, dense,
-                                            length=length)
+                                            length=length,
+                                            constrain=self._constrain1)
                 new_state = {k: new[k] for k in state}
                 if has_pool:
                     pools = scatter_chunk_pages(pools, new, write_ids, b0, ps, nb)
-                return logits, new_state, pools
+                return logits, new_state, self._with_specs(pools,
+                                                           self._pool_pspecs)
             self._chunk_fns[key] = jax.jit(fn)
         return self._chunk_fns[key]
 
@@ -676,12 +758,14 @@ class ServingEngine:
                 if has_pool:
                     dense.update(gather_page_views(pools, ctx_tab))
                 logits, new, ckpts = verify_chunk(cfg, params,
-                                                  {"tokens": toks}, dense)
+                                                  {"tokens": toks}, dense,
+                                                  constrain=self._constrain)
                 new_state = {k: new[k] for k in state}
                 if has_pool:
                     pools = scatter_chunk_pages_rows(pools, new, wtabs, b0s,
                                                      ps, nb)
-                return logits, new_state, pools, ckpts
+                return (logits, self._with_specs(new_state, self._cache_pspecs),
+                        self._with_specs(pools, self._pool_pspecs), ckpts)
             self._verify_fns[n_ctx] = (jax.jit(fn), nb)
         return self._verify_fns[n_ctx]
 
@@ -873,6 +957,25 @@ class ServingEngine:
 
     # --------------------------------------------------------------- run ---
 
+    def step(self) -> bool:
+        """One continuous-batching round: admit queued requests into free
+        slots, then run one batched decode/verify phase. Returns whether
+        work remains. `run()` is a loop over this; `serving/replicas.py`
+        drives several engines' step() interleaved off a shared queue."""
+        while self.queue and not self._live.all():
+            slot = int(np.argmin(self._live))
+            req = self.queue.popleft()
+            try:
+                self._insert(slot, req)
+            except PagePoolExhausted:
+                # keep the request visible: it is back at the queue head,
+                # never silently dropped (PR 2 hardening contract)
+                self.queue.appendleft(req)
+                raise
+        if self.active:
+            self._spec_step() if self.spec else self._step()
+        return bool(self.queue or self.active)
+
     def run(self, max_steps: int = 10_000, *, strict: bool = True):
         """Drain the queue. If `max_steps` is exhausted with requests still
         queued/active the run is *truncated*: stats["truncations"] is bumped
@@ -881,18 +984,7 @@ class ServingEngine:
         self.stats["runs"] += 1
         while (self.queue or self.active) and max_steps > 0:
             max_steps -= 1
-            while self.queue and not self._live.all():
-                slot = int(np.argmin(self._live))
-                req = self.queue.popleft()
-                try:
-                    self._insert(slot, req)
-                except PagePoolExhausted:
-                    # keep the request visible: it is back at the queue head,
-                    # never silently dropped (PR 2 hardening contract)
-                    self.queue.appendleft(req)
-                    raise
-            if self.active:
-                self._spec_step() if self.spec else self._step()
+            self.step()
         if self.queue or self.active:
             self.stats["truncations"] += 1
             if strict:

@@ -19,6 +19,16 @@ prefix) integer comparisons, cheap next to a single prefill step.
 
 Eviction is LRU over both knobs: `max_entries` and, when set, `max_bytes`
 of snapshot storage (`cache_ops.cache_nbytes`).
+
+One instance may be shared by several engine replicas (`serving/
+replicas.py`, DESIGN.md §15): entries are immutable after insert, hits only
+touch LRU order, and in the paged layout entry pages are ref-counted in the
+replicas' *shared* PageAllocator — so an eviction triggered by one replica
+can never free a page another replica's live slot still references, and a
+prefix prefilled by one replica splices O(1) into every other. Sharing is
+single-threaded by construction: `ReplicaGroup` interleaves replica steps
+on one host thread (the async tier of ROADMAP item 2 adds locking, not new
+semantics).
 """
 from __future__ import annotations
 

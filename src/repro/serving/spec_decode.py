@@ -113,12 +113,19 @@ class DraftModelDrafter:
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
-                 max_len: int, chunk_size: int = 32):
+                 max_len: int, chunk_size: int = 32, mesh=None):
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"draft model family must be dense/moe (attention KV rollback "
                 f"is a position reset); got {cfg.family!r}")
         self.cfg = cfg
+        if mesh is not None:
+            # mesh-aware engines (DESIGN.md §15) shard the draft model with
+            # the same FSDP+TP rules as the target; the draft's slab cache
+            # stays small enough to leave replicated
+            from repro.distributed.sharding import param_shardings
+            params = jax.device_put(params,
+                                    param_shardings(cfg, params, mesh))
         self.params = params
         self.slots = slots
         self.max_len = max_len

@@ -176,3 +176,95 @@ def test_reduced_dryrun_decode():
         print("DRYRUN-OK", arch)
     """)
     assert out.count("DRYRUN-OK") == 3
+
+
+# ----------------------------------------------- shard_map compat wrapper --
+# The wrapper accepts the jax >= 0.5 spelling (axis_names=/check_vma=) and
+# translates to whichever implementation the installed jax provides. Both
+# dispatch paths run in-process (a 1x1 mesh needs no device forcing).
+
+
+def _wrapper_inputs():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = jnp.arange(8, dtype=jnp.float32)
+    return mesh, x, P("data"), P("data")
+
+
+def test_shard_map_wrapper_new_spelling(monkeypatch):
+    """With jax.shard_map present (0.5.x), the wrapper forwards check_vma
+    and normalizes axis_names to a set."""
+    import jax
+    from repro.distributed.sharding import shard_map
+
+    seen = {}
+
+    def fake_shard_map(f, *, mesh, in_specs, out_specs, check_vma, **kw):
+        seen.update(kw, check_vma=check_vma)
+        return f
+
+    monkeypatch.setattr(jax, "shard_map", fake_shard_map, raising=False)
+    mesh, x, in_s, out_s = _wrapper_inputs()
+    fn = shard_map(lambda v: v * 2, mesh=mesh, in_specs=(in_s,),
+                   out_specs=out_s, axis_names=("data",), check_vma=False)
+    assert seen == {"check_vma": False, "axis_names": {"data"}}
+    assert float(fn(x)[3]) == 6.0          # wrapper returned the mapped fn
+
+
+def test_shard_map_wrapper_legacy_spelling(monkeypatch):
+    """Without jax.shard_map (0.4.x), the wrapper must reach
+    jax.experimental.shard_map with replication checking off (fully manual
+    mode) — and the mapped function must actually compute."""
+    import jax
+    import jax.experimental.shard_map as esm
+    import numpy as np
+    from repro.distributed.sharding import shard_map
+
+    monkeypatch.delattr(jax, "shard_map", raising=False)
+    real, seen = esm.shard_map, {}
+
+    def spy(f, *, mesh, in_specs, out_specs, **kw):
+        seen.update(kw)
+        return real(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    monkeypatch.setattr(esm, "shard_map", spy)
+    mesh, x, in_s, out_s = _wrapper_inputs()
+    fn = shard_map(lambda v: v + 1, mesh=mesh, in_specs=(in_s,),
+                   out_specs=out_s, check_vma=True)
+    assert seen == {"check_rep": False}
+    np.testing.assert_array_equal(np.asarray(jax.jit(fn)(x)),
+                                  np.asarray(x) + 1)
+
+
+# ------------------------------------------------------------- straggler ---
+
+
+def test_straggler_reissue_on_slow_worker():
+    """One synthetic slow worker: its units blow the p95 deadline, get
+    reissued to healthy workers, and every unit still completes exactly once
+    with the right value (first completion wins, duplicates suppressed)."""
+    from repro.distributed.straggler import run_with_stragglers
+
+    slow = lambda wid: 0.4 if wid == 0 else 0.002
+    results, stats = run_with_stragglers(
+        list(range(10)), lambda p: p * p, n_workers=3,
+        deadline_factor=2.0, min_deadline_s=0.05, worker_delay=slow)
+    assert results == {i: i * i for i in range(10)}
+    assert stats.completed == 10
+    assert stats.reissued >= 1            # the slow worker's unit was duped
+    # a duplicated unit that both copies finish is suppressed, not double-
+    # counted: completions never exceed the unit count
+    assert stats.completed + stats.duplicates_suppressed >= 10
+
+
+def test_straggler_no_reissue_when_healthy():
+    from repro.distributed.straggler import run_with_stragglers
+
+    results, stats = run_with_stragglers(
+        list(range(6)), lambda p: p + 1, n_workers=3,
+        deadline_factor=50.0, min_deadline_s=5.0)
+    assert results == {i: i + 1 for i in range(6)}
+    assert stats.reissued == 0

@@ -320,3 +320,93 @@ def test_chunked_prefill_matches_full_prefill():
     assert int(cache["pos"]) == int(full_cache["pos"]) == 13
     np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
                                atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------- allocator properties ------
+# Hypothesis-driven invariants for the *shared-pool* regime (serving/
+# replicas.py shares one PageAllocator across engine replicas): two clients
+# interleave acquire / retain (prefix splice) / CoW / release against one
+# allocator. Whatever the interleaving, ref-counts must match an exact model
+# (conservation — every acquire is balanced by exactly one release), the
+# free list must never hold a live page, and a drained client's second
+# release must fail loudly (double free). Skips when hypothesis is absent.
+
+
+def test_page_allocator_shared_pool_properties():
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    cfg = _cfg()
+    op = st.tuples(st.sampled_from(["alloc", "retain", "release", "cow",
+                                    "drain"]),
+                   st.integers(0, 1),         # client id
+                   st.integers(0, 7))         # operand selector
+    NUM_PAGES = 9
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(ops=st.lists(op, min_size=1, max_size=40))
+    def run(ops):
+        alloc = PageAllocator(cfg, num_pages=NUM_PAGES, page_size=4)
+        model = {}                    # page -> expected refcount
+        owned = {0: [], 1: []}        # client -> refs held (dups = refs)
+        for action, client, sel in ops:
+            refs = owned[client]
+            if action == "alloc":
+                n = sel % 3 + 1
+                if n <= alloc.free_pages:
+                    ids = alloc.alloc(n)
+                    assert all(model.get(i, 0) == 0 for i in ids), \
+                        "allocated a live page"
+                    for i in ids:
+                        model[i] = 1
+                    refs.extend(ids)
+                else:                 # all-or-nothing: nothing leaks
+                    before = alloc.free_pages
+                    with pytest.raises(PagePoolExhausted):
+                        alloc.alloc(n)
+                    assert alloc.free_pages == before
+            elif action == "retain":
+                both = owned[0] + owned[1]
+                if both:              # cross-client prefix splice
+                    p = both[sel % len(both)]
+                    alloc.retain([p])
+                    model[p] += 1
+                    refs.append(p)
+            elif action == "release":
+                if refs:
+                    p = refs.pop(sel % len(refs))
+                    alloc.release([p])
+                    model[p] -= 1
+            elif action == "cow":
+                if refs and alloc.free_pages:
+                    dst = alloc.copy_page(refs[sel % len(refs)])
+                    assert model.get(dst, 0) == 0
+                    model[dst] = 1
+                    refs.append(dst)
+            elif action == "drain":   # replica frees a whole slot at once
+                if refs:
+                    alloc.release(refs)
+                    for p in refs:
+                        model[p] -= 1
+                    refs.clear()
+            # invariants, after every single op
+            live = {p for p, c in model.items() if c > 0}
+            for p in range(1, NUM_PAGES):
+                assert alloc.refcount[p] == model.get(p, 0), f"page {p}"
+            free = alloc._free
+            assert len(free) == len(set(free)), "free list duplicate"
+            assert not set(free) & live, "free list holds a live page"
+            assert PAGE_SINK not in free
+            assert alloc.free_pages + alloc.used_pages == NUM_PAGES - 1
+        # conservation at the end: refs held == total live refcount
+        assert sum(c for c in model.values() if c > 0) == \
+            sum(len(r) for r in owned.values())
+        # and a page fully drained by both clients double-frees loudly
+        dead = [p for p, c in model.items() if c == 0]
+        if dead:
+            with pytest.raises(RuntimeError, match="double free"):
+                alloc.release([dead[0]])
+
+    run()
