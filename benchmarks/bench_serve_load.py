@@ -1,0 +1,217 @@
+"""Sustained-QPS load test of the async serving tier (DESIGN.md §16).
+
+Workload: three tenants (one with double fair-share weight) submit a
+request stream on a fixed virtual-clock arrival schedule — `qps` requests
+per pump tick — into a `ServingFrontend` over a paged-KV engine whose
+page pool is deliberately small, so admission runs against real page
+headroom and the backpressure path (defer, never an exception) engages.
+Latencies are sampled in *pump ticks* (`clock="ticks"`), so every gated
+number is deterministic: no wall-clock in the contract.
+
+Phases:
+
+  load   the sustained stream drains to completion. Checks: every ticket
+         resolves DONE; per-request output tokens are byte-identical to
+         a fresh serial engine running each request alone (scheduling
+         policy must never change results); `PagePoolExhausted` never
+         escapes (absorbed count is reported); p50/p99 submit→done and
+         queue-wait tick latencies + pumps-to-drain are the gated
+         latency/throughput counters.
+  probe  the same stream re-submitted in one burst against a small
+         `max_queue` bound. Checks: overflow sheds as *typed* tickets
+         (SHED_QUEUE_FULL), nothing raises, and accepted requests still
+         complete with correct outputs.
+
+Emits `benchmarks/out/BENCH_serve_load.json` (+ per-tenant CSV), gated
+by `compare.py --bench serve_load` against the committed smoke baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.data import lm_data
+from repro.models import init_params
+from repro.serving.costs import LatencySeries
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.frontend import (DONE, SHED, SHED_QUEUE_FULL,
+                                    ServingFrontend)
+
+OUT = Path(__file__).parent / "out"
+
+TENANTS = [("gold", 2.0), ("silver", 1.0), ("bronze", 1.0)]
+
+
+def _workload(n_requests: int, max_new: int):
+    """Deterministic request stream: round-robin tenants, shared task
+    prefix (prefix-cache regime) + per-request payload, arrival tick per
+    the schedule built in `run`."""
+    prefix = "Task: summarize the record. Evidence: "
+    reqs = []
+    for i in range(n_requests):
+        tenant = TENANTS[i % len(TENANTS)][0]
+        payload = f"doc {i:03d} " + " ".join(
+            f"field{j}={((i + 1) * (j + 3)) % 97}" for j in range(6))
+        toks = lm_data.encode(prefix + payload + " Answer:")
+        reqs.append((tenant, toks, len(lm_data.encode(prefix))))
+    return reqs, max_new
+
+
+def _engine(cfg, params, *, slots: int, num_pages: int):
+    return ServingEngine(cfg, params, slots=slots, max_len=192,
+                         kv_layout="paged", page_size=16,
+                         num_pages=num_pages, prefix_cache=True)
+
+
+def _serial_outputs(cfg, params, workload, max_new, *, slots, num_pages):
+    """Reference: each request alone on a fresh-state engine — the output
+    any schedule must reproduce byte-for-byte."""
+    eng = _engine(cfg, params, slots=slots, num_pages=num_pages)
+    outs = {}
+    for rid, (tenant, toks, shared) in enumerate(workload):
+        req = Request(rid=rid, prompt=list(toks), max_new=max_new,
+                      shared_len=shared)
+        eng.submit(req)
+        done = eng.run()
+        outs[rid] = list(done[rid].out)
+    return outs
+
+
+def run(smoke: bool = False, quick: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = smoke or quick
+    n_requests = 18 if small else 48
+    qps = 2                      # arrivals per pump tick
+    max_new = 10
+    slots = 3
+    num_pages = 20               # < slots * per-request page demand: the
+    # page-headroom defer path and prefix-LRU eviction both run live
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    workload, max_new = _workload(n_requests, max_new)
+
+    t0 = time.time()
+    serial = _serial_outputs(cfg, params, workload, max_new,
+                             slots=slots, num_pages=num_pages)
+    wall_serial = time.time() - t0
+
+    # ---------------------------------------------------------- load phase --
+    t0 = time.time()
+    eng = _engine(cfg, params, slots=slots, num_pages=num_pages)
+    fe = ServingFrontend(eng, tenant_weights=dict(TENANTS),
+                         max_prefill_chunks=2, clock="ticks")
+    pool_baseline = eng.pool_free_pages()
+    tickets, escaped = [], False
+    pending = list(enumerate(workload))   # (rid, (tenant, toks, shared))
+    try:
+        while pending or fe.has_work():
+            for rid, (tenant, toks, shared) in pending[:qps]:
+                req = Request(rid=rid, prompt=list(toks), max_new=max_new,
+                              shared_len=shared)
+                tickets.append(fe.submit(req=req, tenant=tenant))
+            pending = pending[qps:]
+            fe.pump()
+    except Exception:           # noqa: BLE001 — the invariant under test
+        escaped = True
+        raise
+    finally:
+        wall_load = time.time() - t0
+
+    all_done = all(t.status == DONE for t in tickets)
+    rows_identical = all(list(t.req.out) == serial[t.rid] for t in tickets)
+    # pages still referenced by the prefix cache are *accounted* (clear()
+    # releases them); anything short of baseline after that is a true leak
+    eng.prefix_cache.clear()
+    pool_restored = eng.pool_free_pages() == pool_baseline
+
+    latency, qwait = LatencySeries(), LatencySeries()
+    for t in tickets:
+        latency.add(t.resolved_tick - t.submitted_tick)
+        qwait.add(t.admitted_tick - t.submitted_tick)
+    lat, qw = latency.snapshot(), qwait.snapshot()
+
+    # --------------------------------------------------------- probe phase --
+    eng_p = _engine(cfg, params, slots=slots, num_pages=num_pages)
+    fe_p = ServingFrontend(eng_p, tenant_weights=dict(TENANTS),
+                           max_queue=6, max_prefill_chunks=2)
+    probe = [fe_p.submit(req=Request(rid=rid, prompt=list(toks),
+                                     max_new=max_new, shared_len=shared),
+                         tenant=tenant)
+             for rid, (tenant, toks, shared) in enumerate(workload)]
+    fe_p.pump_until_idle()
+    shed = [t for t in probe if t.status == SHED]
+    kept = [t for t in probe if t.status == DONE]
+    sheds_typed = (len(shed) > 0 and
+                   all(t.shed_reason == SHED_QUEUE_FULL for t in shed) and
+                   len(shed) + len(kept) == len(probe))
+    probe_rows_ok = all(list(t.req.out) == serial[t.rid] for t in kept)
+
+    result = {
+        "bench": "serve_load", "smoke": bool(small),
+        "requests": n_requests, "qps_per_tick": qps,
+        "tenants": len(TENANTS), "slots": slots, "num_pages": num_pages,
+        # invariants
+        "rows_identical_to_serial": bool(rows_identical),
+        "all_requests_completed": bool(all_done),
+        "pool_exhausted_never_escaped": not escaped,
+        "pool_restored_after_drain": bool(pool_restored),
+        "probe_sheds_typed": bool(sheds_typed),
+        "probe_rows_identical": bool(probe_rows_ok),
+        # gated latency/throughput counters (pump ticks — deterministic)
+        "p50_latency_ticks": lat["p50"],
+        "p99_latency_ticks": lat["p99"],
+        "queue_wait_p50_ticks": qw["p50"],
+        "queue_wait_p99_ticks": qw["p99"],
+        "pumps_to_drain": fe.stats["pumps"],
+        "decode_steps": eng.stats["decode_steps"],
+        # reported context
+        "queue_depth_peak": fe.stats["queue_depth_peak"],
+        "deferred": fe.stats["deferred"],
+        "admission_deferred": eng.stats["admission_deferred"],
+        "pool_exhausted_absorbed": fe.stats["pool_exhausted_absorbed"],
+        "shed_rate_probe": round(len(shed) / len(probe), 4),
+        "wall_serial_s": round(wall_serial, 3),
+        "wall_load_s": round(wall_load, 3),
+    }
+    with open(OUT / "BENCH_serve_load.json", "w") as f:
+        json.dump(result, f, indent=2)
+    with open(OUT / "serve_load.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["tenant", "weight", "submitted", "completed",
+                    "queue_wait_p50", "queue_wait_p99",
+                    "latency_p50", "latency_p99"])
+        for name, weight in TENANTS:
+            s = fe.tenants[name].snapshot()
+            w.writerow([name, weight, s["submitted"], s["completed"],
+                        s["queue_wait"]["p50"], s["queue_wait"]["p99"],
+                        s["latency"]["p50"], s["latency"]["p99"]])
+
+    print(f"serve_load: {n_requests} reqs @ {qps}/tick over {len(TENANTS)} "
+          f"tenants | p50/p99 latency {lat['p50']}/{lat['p99']} ticks | "
+          f"queue wait p99 {qw['p99']} ticks | "
+          f"deferred {result['deferred']}+{result['admission_deferred']} | "
+          f"probe shed {len(shed)}/{len(probe)} typed={sheds_typed} | "
+          f"rows identical: {rows_identical} | "
+          f"wall {wall_serial:.1f}s serial -> {wall_load:.1f}s loaded")
+
+    assert rows_identical, "load scheduling changed request outputs"
+    assert all_done, "a request failed to complete under load"
+    assert pool_restored, "paged-KV pages leaked across the load run"
+    assert sheds_typed, "overload probe did not shed as typed tickets"
+    assert probe_rows_ok, "a shed-phase survivor produced wrong output"
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke, quick=args.quick)

@@ -70,6 +70,21 @@ SPECS = {
         # is the deterministic invocation counters above.
         "wall": [],
     },
+    "serve_load": {
+        "invariants": ["rows_identical_to_serial", "all_requests_completed",
+                       "pool_exhausted_never_escaped",
+                       "pool_restored_after_drain",
+                       "probe_sheds_typed", "probe_rows_identical"],
+        "metrics": [("p50_latency_ticks", "lower"),
+                    ("p99_latency_ticks", "lower"),
+                    ("queue_wait_p99_ticks", "lower"),
+                    ("pumps_to_drain", "lower"),
+                    ("decode_steps", "lower")],
+        # latencies are gated in deterministic pump ticks, not seconds —
+        # wall-clock on the tiny smoke model is dispatch-noise-dominated,
+        # so walls are reported but not gated (spec_decode precedent)
+        "wall": [],
+    },
     "sharded_serving": {
         "invariants": ["dp2_rows_identical", "mesh_rows_identical",
                        "ledger_token_columns_identical",

@@ -19,7 +19,12 @@ Uses the arch's reduced (smoke) config so it runs on CPU; on TPU pass
 1x2` serves one TP/FSDP-sharded engine on a device mesh (DESIGN.md §15;
 on CPU the devices are forced via XLA_FLAGS before jax initializes) and
 `--replicas 2` runs data-parallel engines behind one shared admission
-queue — rows are byte-identical either way.
+queue — rows are byte-identical either way. `--tenants N [--qps R]`
+routes every extraction through the async admission tier (DESIGN.md §16):
+each query runs as its own tenant under weighted fair-share scheduling
+with page-headroom backpressure, and per-tenant token/latency accounting
+prints at the end. `--compilation-cache DIR` persists XLA compilations
+across runs.
 """
 import argparse
 import os
@@ -56,6 +61,7 @@ from repro.index.retriever import TwoLevelRetriever  # noqa: E402
 from repro.launch.mesh import make_serving_mesh, parse_mesh_shape  # noqa: E402
 from repro.models import init_params  # noqa: E402
 from repro.serving.engine import ServingEngine  # noqa: E402
+from repro.serving.frontend import ServingFrontend  # noqa: E402
 from repro.serving.replicas import ReplicaGroup  # noqa: E402
 
 
@@ -77,6 +83,16 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel engine replicas behind one shared "
                          "queue (DESIGN.md §15)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="route extraction through the async admission tier "
+                         "with N tenants on weighted fair-share scheduling "
+                         "(DESIGN.md §16); 0 = direct engine submission")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="with --tenants: stagger query arrivals at this "
+                         "rate instead of submitting all at once")
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persistent JAX compilation cache directory — "
+                         "repeat runs skip XLA recompiles")
     args = ap.parse_args()
 
     cfg = (get_config if args.full else get_smoke_config)(args.arch)
@@ -92,18 +108,26 @@ def main():
         engine = ReplicaGroup(cfg, params, replicas=args.replicas,
                               slots=args.slots, max_len=1024,
                               prefix_cache=not args.no_prefix_cache,
-                              spec_decode=args.spec_decode, mesh=mesh)
+                              spec_decode=args.spec_decode, mesh=mesh,
+                              compilation_cache_dir=args.compilation_cache)
         print(f"{args.replicas} engine replicas behind one shared queue")
     else:
         engine = ServingEngine(cfg, params, slots=args.slots, max_len=1024,
                                prefix_cache=not args.no_prefix_cache,
-                               spec_decode=args.spec_decode, mesh=mesh)
+                               spec_decode=args.spec_decode, mesh=mesh,
+                               compilation_cache_dir=args.compilation_cache)
+
+    frontend = None
+    if args.tenants > 0:
+        frontend = ServingFrontend(engine, max_prefill_chunks=2)
+        print(f"admission tier: {args.tenants} tenants, weighted fair share")
 
     corpus = make_swde_corpus()
     retriever = TwoLevelRetriever(corpus)
     # longer generations give the prompt-lookup drafter its regime (the
     # n-gram matcher accelerates repeated/copied spans mid-output)
-    extractor = ServedExtractor(corpus, engine, max_new=24)
+    extractor = ServedExtractor(corpus, engine, max_new=24,
+                                frontend=frontend)
     batch = args.batch_size if args.batch_size is not None else args.slots
     session = Session(retriever, extractor, sample_rate=0.03,
                       batch_size=batch)
@@ -124,7 +148,17 @@ def main():
         print("\n" + p.explain_text())
 
     t0 = time.time()
-    h1, h2 = p1.submit(), p2.submit()     # both in flight, shared rounds
+    if args.tenants > 0:
+        # each query runs as its own tenant (round-robin); --qps staggers
+        # arrivals like a live workload instead of one submit burst
+        handles = []
+        for i, p in enumerate((p1, p2)):
+            if args.qps > 0 and i:
+                time.sleep(1.0 / args.qps)
+            handles.append(p.submit(tenant=f"tenant-{i % args.tenants}"))
+        h1, h2 = handles
+    else:
+        h1, h2 = p1.submit(), p2.submit()  # both in flight, shared rounds
     session.drain()
     dt = time.time() - t0
     r1, r2 = h1.result(), h2.result()
@@ -147,6 +181,13 @@ def main():
     print("serving engine stats:", engine.stats)
     print("served extractor:", extractor.stats)
     print("batch scheduler:", session.scheduler.stats.snapshot())
+    if frontend is not None:
+        print("admission tier:", frontend.stats)
+        for tenant, snap in sorted(frontend.tenant_snapshot().items()):
+            print(f"  {tenant}: {snap}")
+        for tenant, snap in session.tenant_costs().items():
+            print(f"  {tenant} tokens: in={snap['input_tokens']} "
+                  f"out={snap['output_tokens']} calls={snap['llm_calls']}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,13 @@ query's columns — per-query accounting never double-counts across
 `execute()` calls. Batch/prefix counters and wall time are recorded where
 they happen (shared rounds on the parent, per-query participation on the
 child) and do not forward.
+
+Multi-tenant sessions (DESIGN.md §16) insert a tenant layer: one
+`child(tenant=...)` ledger per tenant, whose own children are the
+queries, so charges forward query -> tenant -> session and per-tenant
+token columns fall out of the same forwarding that per-query ones do.
+The `tenant` tag also rides on serving requests so the frontend can
+attribute engine work back to the tenant.
 """
 from __future__ import annotations
 
@@ -46,10 +53,17 @@ class CostLedger:
     decode_steps_saved: int = 0
     # parent session ledger (child() creates the link); charges forward up
     parent: Optional["CostLedger"] = None
+    # admission-control identity: set on per-tenant ledgers (and inherited
+    # by their query children) so serving requests can be attributed
+    tenant: str = ""
 
-    def child(self) -> "CostLedger":
-        """Per-query child: its token charges also land on this ledger."""
-        return CostLedger(parent=self)
+    def child(self, tenant: Optional[str] = None) -> "CostLedger":
+        """Per-query (or per-tenant) child: its token charges also land on
+        this ledger. `tenant` tags the child; omitted, the child inherits
+        this ledger's tenant, so query ledgers under a tenant ledger carry
+        the tenant tag without every caller threading it."""
+        return CostLedger(parent=self,
+                          tenant=self.tenant if tenant is None else tenant)
 
     def charge(self, *, inp: int, out: int = 0, calls: int = 1, phase: str = "query"):
         self.input_tokens += inp

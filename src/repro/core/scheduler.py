@@ -31,12 +31,21 @@ share the same extract_batch rounds and (attr, table) prefix groups while
 per-query token accounting stays exact.
 
 Knobs: `batch_size` (max extractions per extract_batch round; 1 = the
-serial per-extraction path), `queue_depth` (max in-flight documents).
+serial per-extraction path), `queue_depth` (max in-flight documents),
+`round_token_budget` (optional latency budget, DESIGN.md §16: a round is
+cut when its cumulative *estimated* tokens — retrieved-segment tokens
+plus prompt/answer overhead — would exceed the budget, not only when
+`batch_size` items accumulate, bounding how long one extract_batch round
+can occupy the engine before other work gets a turn; chunk boundaries
+never change values or token columns, so the parity bar is unaffected).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
+from typing import Optional
+
+from repro.data.tokens import count_tokens
 
 PROMPT_OVERHEAD = 40      # instruction tokens per extraction call
 OUTPUT_TOKENS = 12        # answer tokens per extraction call
@@ -102,13 +111,15 @@ class BatchScheduler:
     """
 
     def __init__(self, retriever, extractor, ledger, cache: dict, *,
-                 batch_size: int = 1, queue_depth: int = 32):
+                 batch_size: int = 1, queue_depth: int = 32,
+                 round_token_budget: Optional[int] = None):
         self.retriever = retriever
         self.extractor = extractor
         self.ledger = ledger
         self.cache = cache
         self.batch_size = max(1, int(batch_size))
         self.queue_depth = max(1, int(queue_depth))
+        self.round_token_budget = round_token_budget
         self.stats = SchedulerStats()
 
     # ------------------------------------------------------- coroutines ----
@@ -178,9 +189,39 @@ class BatchScheduler:
 
     def _resolve(self, keys: list, *, phase: str, owners: dict = None) -> None:
         keys = self._group_by_prefix(keys)
-        for i in range(0, len(keys), self.batch_size):
-            self._extract_chunk(keys[i:i + self.batch_size], phase=phase,
-                                owners=owners)
+        for chunk in self._chunks(keys):
+            self._extract_chunk(chunk, phase=phase, owners=owners)
+
+    def _chunks(self, keys: list):
+        """Cut the grouped round into extract_batch chunks: by count alone
+        (legacy), or — with `round_token_budget` — also by cumulative
+        estimated tokens, so one chunk never occupies the engine past the
+        latency budget. A chunk always takes at least one item (an
+        over-budget single extraction must still run)."""
+        if self.round_token_budget is None:
+            for i in range(0, len(keys), self.batch_size):
+                yield keys[i:i + self.batch_size]
+            return
+        chunk, spent = [], 0
+        for key in keys:
+            est = self._estimate_tokens(key)
+            if chunk and (len(chunk) >= self.batch_size or
+                          spent + est > self.round_token_budget):
+                yield chunk
+                chunk, spent = [], 0
+            chunk.append(key)
+            spent += est
+        if chunk:
+            yield chunk
+
+    def _estimate_tokens(self, key) -> int:
+        """Pre-retrieval token estimate for one need (segment tokens plus
+        the fixed prompt/answer overhead). Retrieval is index work, not LLM
+        cost — looking segments up here charges nothing."""
+        doc_id, attr, table = key
+        segs = self.retriever.segments(doc_id, attr, table)
+        return PROMPT_OVERHEAD + OUTPUT_TOKENS + \
+            sum(count_tokens(s) for s in segs)
 
     @staticmethod
     def _group_by_prefix(keys: list) -> list:
@@ -211,7 +252,16 @@ class BatchScheduler:
             return
         hits0, saved0 = self._prefix_stats()
         spec0 = self._spec_stats()
-        out = self.extractor.extract_batch(items)
+        if owners is not None and getattr(self.extractor, "accepts_owners",
+                                          False):
+            # opt-in protocol extension: the serving path maps each item's
+            # owning child ledger to its tenant for admission control.
+            # Gated on the attribute so duck-typed extractors (tests,
+            # oracle stubs) keep the positional-only signature.
+            out = self.extractor.extract_batch(
+                items, owners=[owners.get(k) for k in slots])
+        else:
+            out = self.extractor.extract_batch(items)
         hits1, saved1 = self._prefix_stats()
         spec1 = self._spec_stats()
         self.stats.rounds += 1
@@ -262,7 +312,12 @@ class BatchScheduler:
             chunk = items[i:i + self.batch_size]
             hits0, saved0 = self._prefix_stats()
             spec0 = self._spec_stats()
-            res = self.extractor.extract_full_doc_batch(chunk)
+            if owners is not None and getattr(self.extractor,
+                                              "accepts_owners", False):
+                res = self.extractor.extract_full_doc_batch(
+                    chunk, owners=owners[i:i + self.batch_size])
+            else:
+                res = self.extractor.extract_full_doc_batch(chunk)
             hits1, saved1 = self._prefix_stats()
             spec1 = self._spec_stats()
             self.ledger.record_batch(len(chunk))

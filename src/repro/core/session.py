@@ -29,6 +29,18 @@ batch into the same `extract_batch`/`engine.run()` rounds and group by
 (attr, table) for prefix-KV reuse across queries. Any blocking call
 (`rows()`, `result()`, `drain()`) advances the whole session, so progress
 never depends on which handle the caller happens to be waiting on.
+
+Multi-tenant serving (DESIGN.md §16): `submit(..., tenant=...)` routes
+the query's charges through a per-tenant ledger layer (query -> tenant ->
+session forwarding), tags its extraction requests so a `ServingFrontend`
+can apply per-tenant fair-share admission, and `deadline_s` bounds how
+long the query may stay in flight — an expired query is cancelled at the
+top of the next `_step` and its `result()` raises `QueryTimeout`.
+`Session.cancel(handle)` / `QueryHandle.cancel()` aborts a query early;
+both paths release every resource the query held (sampling reservations
+roll back exactly as on failure) so concurrent queries never stall on a
+dead owner. `QueryHandle.aresult()` / `Session.adrain()` are awaitable
+facades over the same cooperative `_step` pump for asyncio callers.
 """
 from __future__ import annotations
 
@@ -44,7 +56,18 @@ from .scheduler import (OUTPUT_TOKENS, PROMPT_OVERHEAD, BatchScheduler,
                         RunQueue)
 from .stats import SampleStats, sample_size
 
-__all__ = ["Session", "PreparedQuery", "QueryHandle", "QueryError"]
+__all__ = ["Session", "PreparedQuery", "QueryHandle", "QueryError",
+           "QueryCancelled", "QueryTimeout"]
+
+
+class QueryCancelled(RuntimeError):
+    """The query was cancelled before completing; raised by `result()` /
+    `rows()` of a handle that `Session.cancel()` was called on."""
+
+
+class QueryTimeout(QueryCancelled):
+    """The query's `deadline_s` elapsed before it completed. A subclass of
+    QueryCancelled: timeout is cancellation with a clock as the caller."""
 
 
 # --------------------------------------------------------------- barriers --
@@ -153,11 +176,20 @@ class QueryHandle:
     blocking on any handle advances the *whole* session, so concurrent
     handles make progress together and share extraction rounds."""
 
-    def __init__(self, session: "Session", prepared: "PreparedQuery"):
+    def __init__(self, session: "Session", prepared: "PreparedQuery", *,
+                 tenant: Optional[str] = None, priority: int = 0,
+                 deadline_s: Optional[float] = None):
         self.session = session
         self.query = prepared.query
         self.qid = session._next_qid()
-        self.ledger = session.ledger.child()
+        self.tenant = tenant or ""
+        self.priority = priority
+        # query ledger hangs off the tenant layer when one is named, so
+        # charges forward query -> tenant -> session and the ledger's
+        # tenant tag rides to the serving tier via scheduler owners=
+        parent = (session._tenant_ledger(tenant) if tenant
+                  else session.ledger)
+        self.ledger = parent.child()
         self.run = QueryRun(
             self.query, retriever=session.retriever,
             extractor=session.extractor, cache=session.cache,
@@ -176,12 +208,19 @@ class QueryHandle:
         self._error: Optional[BaseException] = None
         self._result: Optional[QueryResult] = None
         self._t0 = time.time()
+        self.deadline = (self._t0 + deadline_s
+                         if deadline_s is not None else None)
 
     # -- consumption ------------------------------------------------------
 
     @property
     def done(self) -> bool:
         return self._done
+
+    def cancel(self) -> bool:
+        """Abort this query; returns False if it already finished. Its
+        `result()`/`rows()` raise `QueryCancelled` from then on."""
+        return self.session.cancel(self)
 
     def rows(self) -> Iterator[dict]:
         """Stream result rows in arrival order, each exactly once per
@@ -201,6 +240,20 @@ class QueryHandle:
         (rows identical to what `rows()` streamed)."""
         while not self._done:
             self.session._step()
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    async def aresult(self) -> QueryResult:
+        """Awaitable `result()`: one cooperative session round per event-
+        loop turn, yielding control between rounds so other coroutines
+        (and other handles' awaiters) interleave. Rows and ledger columns
+        are byte-identical to the blocking path — same `_step` pump, the
+        event loop just owns the outer loop."""
+        import asyncio
+        while not self._done:
+            self.session._step()
+            await asyncio.sleep(0)
         if self._error is not None:
             raise self._error
         return self._result
@@ -238,8 +291,10 @@ class PreparedQuery:
     def explain_text(self) -> str:
         return render_explain(self.explain())
 
-    def submit(self) -> QueryHandle:
-        return self.session.submit(self)
+    def submit(self, *, tenant: Optional[str] = None, priority: int = 0,
+               deadline_s: Optional[float] = None) -> QueryHandle:
+        return self.session.submit(self, tenant=tenant, priority=priority,
+                                   deadline_s=deadline_s)
 
 
 def render_explain(plan: dict) -> str:
@@ -282,6 +337,7 @@ class Session:
                  join_strategy: str = "transform",
                  ledger: Optional[CostLedger] = None,
                  batch_size: int = 1, queue_depth: int = 32,
+                 round_token_budget: Optional[int] = None,
                  table_context_hook=None):
         self.retriever = retriever
         self.extractor = extractor
@@ -295,14 +351,29 @@ class Session:
         self._escalated: set = set()        # keys already retried full-doc
         self.scheduler = BatchScheduler(retriever, extractor, self.ledger,
                                         self.cache, batch_size=batch_size,
-                                        queue_depth=queue_depth)
+                                        queue_depth=queue_depth,
+                                        round_token_budget=round_token_budget)
         self._samples: dict = {}    # table -> TableSample | _SampleReservation
         self._active: list = []     # in-flight QueryHandles, submit order
+        self._tenant_ledgers: dict = {}     # tenant -> per-tenant CostLedger
         self._qid = 0
 
     def _next_qid(self) -> int:
         self._qid += 1
         return self._qid
+
+    def _tenant_ledger(self, tenant: str) -> CostLedger:
+        """Memoized per-tenant layer between session and query ledgers."""
+        led = self._tenant_ledgers.get(tenant)
+        if led is None:
+            led = self.ledger.child(tenant=tenant)
+            self._tenant_ledgers[tenant] = led
+        return led
+
+    def tenant_costs(self) -> dict:
+        """tenant -> ledger snapshot, for everything charged under it."""
+        return {t: led.snapshot()
+                for t, led in sorted(self._tenant_ledgers.items())}
 
     # ------------------------------------------------------------ prepare --
 
@@ -391,15 +462,22 @@ class Session:
 
     # ------------------------------------------------------------- submit --
 
-    def submit(self, prepared: Union[PreparedQuery, Query]) -> QueryHandle:
+    def submit(self, prepared: Union[PreparedQuery, Query], *,
+               tenant: Optional[str] = None, priority: int = 0,
+               deadline_s: Optional[float] = None) -> QueryHandle:
         """Start executing a prepared query; returns its handle. Execution
         interleaves with every other in-flight handle's from the next
-        `_step` on, whoever drives it."""
+        `_step` on, whoever drives it. `tenant` routes charges through a
+        per-tenant ledger and tags the query's serving requests for
+        admission control; `deadline_s` cancels the query (with
+        `QueryTimeout`) if it is still in flight that many seconds after
+        submit."""
         if isinstance(prepared, Query):
             prepared = self.prepare(prepared)
         if prepared.session is not self:
             raise QueryError("prepared query belongs to a different session")
-        handle = QueryHandle(self, prepared)
+        handle = QueryHandle(self, prepared, tenant=tenant,
+                             priority=priority, deadline_s=deadline_s)
         self._active.append(handle)
         return handle
 
@@ -407,10 +485,39 @@ class Session:
         """Single-query convenience: prepare + submit + block."""
         return self.submit(query).result()
 
+    def cancel(self, handle: QueryHandle,
+               err: Optional[BaseException] = None) -> bool:
+        """Abort an in-flight query. Returns False if it already finished
+        (a completed result is never retracted). Everything the query
+        holds is released — its coroutine is closed, unpublished sampling
+        reservations roll back to the prior sample — so queries blocked on
+        its sampling re-acquire next round instead of stalling."""
+        if handle not in self._active:
+            return False
+        handle.gen.close()
+        self._failed(handle, err or QueryCancelled(
+            f"query {handle.qid} cancelled"))
+        return True
+
+    def _expire_deadlines(self) -> None:
+        now = time.time()
+        for h in list(self._active):
+            if h.deadline is not None and now >= h.deadline:
+                self.cancel(h, QueryTimeout(
+                    f"query {h.qid} exceeded deadline of "
+                    f"{h.deadline - h._t0:.3f}s"))
+
     def drain(self) -> None:
         """Drive every in-flight query to completion."""
         while self._active:
             self._step()
+
+    async def adrain(self) -> None:
+        """Awaitable `drain()`: one `_step` round per event-loop turn."""
+        import asyncio
+        while self._active:
+            self._step()
+            await asyncio.sleep(0)
 
     # -------------------------------------------------------- multiplexer --
 
@@ -421,9 +528,14 @@ class Session:
         if not self._active:
             return False
         t0 = time.time()
+        self._expire_deadlines()
+        if not self._active:
+            return False
         work = _RoundWork()
         progressed = False
         for h in list(self._active):
+            if h not in self._active:   # cancelled by a hook mid-round
+                continue
             progressed |= self._pump(h, work)
         if not work.empty:
             progressed = True

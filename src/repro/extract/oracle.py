@@ -32,6 +32,11 @@ def _doc_rng(doc_id, attr: str, salt: str = "") -> random.Random:
 
 
 class OracleExtractor:
+    # accepts the scheduler's owners= protocol extension (a no-op here:
+    # the oracle has no admission tier to route tenants into) so oracle
+    # and served paths run under identical scheduler call shapes
+    accepts_owners = True
+
     def __init__(self, corpus, *, noisy: bool = True):
         self.corpus = corpus
         self.noisy = noisy
@@ -80,7 +85,7 @@ class OracleExtractor:
                 value = self._fabricate(attr, rng)
         return value, tokens
 
-    def extract_batch(self, items: list):
+    def extract_batch(self, items: list, owners: list = None):
         """Batched protocol: items = [(doc_id, attr, segments)], returns
         [(value, input_tokens)]. The oracle is deterministic per (doc, attr),
         so batching cannot change values or accounting — the property the
@@ -88,7 +93,7 @@ class OracleExtractor:
         return [self.extract(doc_id, attr, segments)
                 for doc_id, attr, segments in items]
 
-    def extract_full_doc_batch(self, items: list):
+    def extract_full_doc_batch(self, items: list, owners: list = None):
         """items = [(doc_id, attrs)] -> [(values, segs_by_attr, tokens)]."""
         return [self.extract_full_doc(doc_id, attrs) for doc_id, attrs in items]
 

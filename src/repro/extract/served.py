@@ -48,10 +48,21 @@ class ServedStats:
 
 
 class ServedExtractor:
+    # opt-in scheduler protocol extension (core/scheduler.py): batch calls
+    # may carry `owners=` (per-item child ledgers) so requests inherit the
+    # owning query's tenant/priority for admission control
+    accepts_owners = True
+
     def __init__(self, corpus, engine: ServingEngine, *, max_new: int = 12,
-                 oracle_fallback: bool = True):
+                 oracle_fallback: bool = True, frontend=None):
+        """frontend: optional `serving.frontend.ServingFrontend` fronting
+        `engine`. When set, every extraction round routes through its
+        admission queue (per-tenant fair share, page-headroom backpressure)
+        instead of submitting straight to the engine — rows stay
+        byte-identical, scheduling policy changes."""
         self.corpus = corpus
         self.engine = engine
+        self.frontend = frontend
         self.max_new = max_new
         self.oracle_fallback = oracle_fallback
         self.stats = ServedStats()
@@ -68,7 +79,16 @@ class ServedExtractor:
                 f"evidence. Attribute: {attr} ({desc}). "
                 f"Answer with the value only. Evidence: ")
 
-    def _make_request(self, prefix_text: str, tail_text: str) -> Request:
+    @staticmethod
+    def _owner_identity(owner) -> tuple:
+        """(tenant, priority) a request inherits from its owning query's
+        child ledger (core/ledger.py tags tenant ledgers and their query
+        children); session-direct work runs as the default tenant."""
+        tenant = getattr(owner, "tenant", "") or "default"
+        return tenant, 0
+
+    def _make_request(self, prefix_text: str, tail_text: str,
+                      owner=None) -> Request:
         """Build a request from (shareable prefix, per-request tail); the
         tail is truncated to the token budget, never the prefix boundary."""
         cap = 4 * MAX_PROMPT_TOKENS
@@ -77,20 +97,49 @@ class ServedExtractor:
         self._rid += 1
         self.stats.requests += 1
         self.stats.prompt_tokens += len(toks)
+        tenant, priority = self._owner_identity(owner)
         return Request(rid=self._rid, prompt=toks or [lm_data.BOS],
                        max_new=self.max_new, eos_id=lm_data.EOS,
-                       shared_len=min(len(prefix), max(len(toks) - 1, 0)))
+                       shared_len=min(len(prefix), max(len(toks) - 1, 0)),
+                       tenant=tenant, priority=priority)
+
+    def _run_round_frontend(self, reqs: list) -> dict:
+        """Admission-tier round: requests queue under their tenants' fair
+        share and the frontend pumps the engine until they resolve. A shed
+        or failed extraction raises visibly — the session layer never
+        mistakes backpressure for an empty answer."""
+        tickets = [self.frontend.submit(req=req, tenant=req.tenant,
+                                        priority=req.priority)
+                   for req in reqs]
+        self.frontend.wait_all(tickets)
+        outs = {}
+        for t in tickets:
+            if t.status != "done":
+                raise RuntimeError(
+                    f"extraction request {t.rid} {t.status}"
+                    f"{f' ({t.shed_reason})' if t.shed_reason else ''}: "
+                    f"{t.req.error or 'no result'}")
+            self.stats.generated_tokens += len(t.req.out)
+            outs[t.rid] = lm_data.decode(t.req.out)
+        self.stats.batches += 1
+        self.stats.max_batch = max(self.stats.max_batch, len(reqs))
+        return outs
 
     def _run_round(self, reqs: list) -> dict:
         """Submit N requests, drain with one continuous-batching run per
         admission window (the engine's queue_depth, when set, bounds how
-        many requests may be queued at once)."""
-        window = self.engine.queue_depth or len(reqs)
+        many requests may be queued at once). With a frontend attached the
+        window is its admission queue instead."""
         outs = {}
         es = self.engine.stats
         hits0, saved0 = es["prefix_hits"], es["prefix_saved_tokens"]
         spec0 = (es["draft_tokens"], es["accepted_tokens"],
                  es["decode_steps_saved"])
+        if self.frontend is not None:
+            outs = self._run_round_frontend(reqs)
+            self._note_round_deltas(es, hits0, saved0, spec0)
+            return outs
+        window = self.engine.queue_depth or len(reqs)
         for i in range(0, len(reqs), max(window, 1)):
             chunk = reqs[i:i + max(window, 1)]
             self.engine.submit_many(chunk)
@@ -106,12 +155,15 @@ class ServedExtractor:
                 out = done[req.rid].out
                 self.stats.generated_tokens += len(out)
                 outs[req.rid] = lm_data.decode(out)
+        self._note_round_deltas(es, hits0, saved0, spec0)
+        return outs
+
+    def _note_round_deltas(self, es, hits0, saved0, spec0):
         self.stats.prefix_hits += es["prefix_hits"] - hits0
         self.stats.saved_prefill_tokens += es["prefix_saved_tokens"] - saved0
         self.stats.draft_tokens += es["draft_tokens"] - spec0[0]
         self.stats.accepted_tokens += es["accepted_tokens"] - spec0[1]
         self.stats.decode_steps_saved += es["decode_steps_saved"] - spec0[2]
-        return outs
 
     def _generate(self, prefix_text: str, tail_text: str) -> str:
         req = self._make_request(prefix_text, tail_text)
@@ -140,9 +192,12 @@ class ServedExtractor:
     def extract(self, doc_id, attr: str, segments: list):
         return self.extract_batch([(doc_id, attr, segments)])[0]
 
-    def extract_batch(self, items: list):
+    def extract_batch(self, items: list, owners: list = None):
         """items = [(doc_id, attr, segments)] -> [(value, input_tokens)].
-        One continuous-batching round for the whole batch."""
+        One continuous-batching round for the whole batch. `owners`
+        (optional, parallel to items) carries each item's owning child
+        ledger; its tenant/priority ride on the request for admission
+        control."""
         results: list = [None] * len(items)
         reqs, meta = [], []
         for i, (doc_id, attr, segments) in enumerate(items):
@@ -151,7 +206,8 @@ class ServedExtractor:
                 results[i] = (None, 0)
                 continue
             req = self._make_request(self._prompt_prefix(doc_id, attr),
-                                     f"{text} Answer:")
+                                     f"{text} Answer:",
+                                     owner=owners[i] if owners else None)
             reqs.append(req)
             meta.append((i, doc_id, attr, text, count_tokens(text), req.rid))
         if reqs:
@@ -175,17 +231,17 @@ class ServedExtractor:
     def extract_full_doc(self, doc_id, attrs: list):
         return self.extract_full_doc_batch([(doc_id, attrs)])[0]
 
-    def extract_full_doc_batch(self, items: list):
+    def extract_full_doc_batch(self, items: list, owners: list = None):
         """Sampling phase, batched: one real engine round represents the
         full-document analysis prompts of the whole chunk (shared attrs
         template first, document text last — same prefix-reuse shape)."""
         results, reqs = [], []
-        for doc_id, attrs in items:
+        for i, (doc_id, attrs) in enumerate(items):
             results.append(self._full_doc_values(doc_id, attrs))
             doc = self.corpus.docs[doc_id]
             reqs.append(self._make_request(
                 f"Task: extract {', '.join(attrs)}. Document: ",
-                doc.text[:800]))
+                doc.text[:800], owner=owners[i] if owners else None))
         if reqs:
             self._run_round(reqs)
         return results

@@ -9,15 +9,109 @@ benchmarks/common.derived_latency_s and reported per arch below).
 
 SSM archs have O(1) decode state instead of a KV cache — exactly the
 "cost-model constants change, technique unchanged" note of DESIGN.md.
+
+The second half of this module is the *measured* side the async serving
+tier needs (DESIGN.md §16): `LatencySeries` (bounded-reservoir percentile
+estimates over whatever unit the caller samples in — wall seconds or the
+frontend's deterministic pump ticks) and `TenantStats` (per-tenant queue
+depth, admission/shed/cancel accounting, pool pages held, speculative
+acceptance, and p50/p99 of queueing + completion latency). The frontend
+maintains one `TenantStats` per tenant continuously; benchmarks snapshot
+them as gateable counters.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from bisect import insort
+from dataclasses import dataclass, field
 
 from repro.models.config import ModelConfig
 
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s / chip
+
+
+class LatencySeries:
+    """Streaming latency percentiles over a bounded window.
+
+    Keeps the most recent `window` samples (FIFO) in sorted order, so
+    `percentile` is exact over the window — deterministic for the tick-based
+    benches, O(log w) insert, bounded memory for long-running frontends."""
+
+    def __init__(self, window: int = 4096):
+        self.window = max(1, int(window))
+        self._fifo: list = []        # arrival order (for eviction)
+        self._sorted: list = []      # value order (for percentiles)
+        self.count = 0               # total samples ever observed
+        self.total = 0.0
+
+    def add(self, value) -> None:
+        self.count += 1
+        self.total += value
+        self._fifo.append(value)
+        insort(self._sorted, value)
+        if len(self._fifo) > self.window:
+            old = self._fifo.pop(0)
+            self._sorted.remove(old)
+
+    def percentile(self, p: float):
+        """Exact percentile over the retained window (nearest-rank);
+        None with no samples."""
+        if not self._sorted:
+            return None
+        rank = max(0, min(len(self._sorted) - 1,
+                          int(round((p / 100.0) * (len(self._sorted) - 1)))))
+        return self._sorted[rank]
+
+    @property
+    def mean(self):
+        return self.total / self.count if self.count else None
+
+    def snapshot(self) -> dict:
+        return {"count": self.count, "mean": self.mean,
+                "p50": self.percentile(50), "p99": self.percentile(99)}
+
+
+@dataclass
+class TenantStats:
+    """Continuous per-tenant serving statistics (DESIGN.md §16). Counters
+    are maintained by `serving/frontend.py` as requests move through the
+    admission state machine; latency series sample in the frontend's time
+    unit (pump ticks under the virtual clock, wall seconds otherwise)."""
+    tenant: str
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    shed: int = 0                  # backpressure: rejected with typed result
+    cancelled: int = 0
+    timeouts: int = 0
+    queue_depth: int = 0           # currently waiting for admission
+    queue_depth_peak: int = 0
+    in_flight: int = 0             # admitted, not yet resolved
+    pool_pages_held: int = 0       # estimated pages admitted-but-unfinished
+    draft_tokens: int = 0          # speculative economy, summed at resolve
+    accepted_tokens: int = 0
+    queue_wait: LatencySeries = field(default_factory=LatencySeries)
+    latency: LatencySeries = field(default_factory=LatencySeries)  # submit->done
+
+    def note_queued(self) -> None:
+        self.submitted += 1
+        self.queue_depth += 1
+        self.queue_depth_peak = max(self.queue_depth_peak, self.queue_depth)
+
+    def acceptance_rate(self):
+        return (self.accepted_tokens / self.draft_tokens
+                if self.draft_tokens else None)
+
+    def snapshot(self) -> dict:
+        out = {k: getattr(self, k) for k in
+               ("tenant", "submitted", "admitted", "completed", "failed",
+                "shed", "cancelled", "timeouts", "queue_depth",
+                "queue_depth_peak", "in_flight", "pool_pages_held",
+                "draft_tokens", "accepted_tokens")}
+        out["queue_wait"] = self.queue_wait.snapshot()
+        out["latency"] = self.latency.snapshot()
+        return out
 
 
 @dataclass(frozen=True)

@@ -101,12 +101,17 @@ class Request:
     eos_id: int = lm_data.EOS
     shared_len: int = 0      # prompt[:shared_len] is shareable across requests
     max_retries: int = 3     # drain_slot evictions tolerated before failing
+    tenant: str = ""         # admission-control identity (serving/frontend.py)
+    priority: int = 0        # admission priority class (higher first)
     out: list = field(default_factory=list)
     done: bool = False
     submitted_s: float = 0.0
     finished_s: float = 0.0
     retries: int = 0
     error: Optional[str] = None
+    # per-request speculative-decode economy (per-tenant acceptance rates)
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
 
 
 class RunTruncated(RuntimeError):
@@ -158,7 +163,8 @@ class ServingEngine:
                  num_pages: Optional[int] = None, chunk_size: int = 32,
                  spec_decode="off", spec_k: int = 4, spec_ngram: int = 3,
                  draft_model: Optional[tuple] = None, mesh=None,
-                 page_allocator: Optional[PageAllocator] = None):
+                 page_allocator: Optional[PageAllocator] = None,
+                 compilation_cache_dir: Optional[str] = None):
         """queue_depth: optional admission-control bound on queued requests;
         ServedExtractor splits its batch rounds into windows of this size
         (None = unbounded).
@@ -186,7 +192,13 @@ class ServingEngine:
         §15). Rows stay byte-identical to the single-device engine.
         page_allocator: an existing PageAllocator to use instead of
         constructing one — `serving/replicas.py` shares a pool (and with it
-        the prefix-cache page references) across engine replicas."""
+        the prefix-cache page references) across engine replicas.
+        compilation_cache_dir: enable jax's persistent compilation cache at
+        this directory before any engine phase is jitted (launch/
+        compile_cache.py) — repeated runs skip re-jit."""
+        if compilation_cache_dir is not None:
+            from repro.launch.compile_cache import enable_compilation_cache
+            enable_compilation_cache(compilation_cache_dir)
         self.cfg = cfg
         self.mesh = mesh
         if mesh is not None:
@@ -220,6 +232,8 @@ class ServingEngine:
         self.active: dict = {}          # slot -> Request
         self.finished: dict = {}
         self.failed: dict = {}          # rid -> Request (retry cap exceeded)
+        self.cancelled: dict = {}       # rid -> Request (cancel() resolved)
+        self._inserting: dict = {}      # slot -> (Request, insert coroutine)
         self.spec_k = max(1, int(spec_k))
         if isinstance(spec_decode, str):
             if spec_decode not in ("off", "prompt_lookup", "draft"):
@@ -260,7 +274,8 @@ class ServingEngine:
                       "cow_copies": 0, "kv_bytes_peak": 0,
                       "prefill_ctx_positions": 0,
                       "spec_rounds": 0, "draft_tokens": 0,
-                      "accepted_tokens": 0, "decode_steps_saved": 0}
+                      "accepted_tokens": 0, "decode_steps_saved": 0,
+                      "cancelled": 0, "admission_deferred": 0}
 
         self.cache = init_decode_cache(cfg, slots, max_len)
         self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
@@ -391,23 +406,14 @@ class ServingEngine:
         return self._prefill_fn(bucket)(self.params, batch,
                                         length=jnp.asarray(n, jnp.int32))
 
-    def _suffix_prefill(self, sub: dict, tokens: list):
-        """Slab layout: advance a B=1 sub-cache through the unshared prompt
-        suffix, one exact decode step per token (position-indexed KV writes;
-        the same recurrence decode uses, so SSM/conv state stays correct).
-        Returns (last-token logits, sub-cache)."""
-        logits = None
-        for t in tokens:
-            logits, sub = self._decode(self.params,
-                                       jnp.asarray([[t]], jnp.int32), sub)
-            self.stats["prefill_invocations"] += 1
-            # each token-step attends the full max_len KV buffer
-            self.stats["prefill_ctx_positions"] += self.max_len
-        return logits, sub
-
-    def _insert_slab(self, slot: int, req: Request):
+    def _insert_slab_co(self, slot: int, req: Request):
+        """Coroutine form of the slab-layout insert: yields between prefill
+        units (one bucketed prefill call, or one exact decode step per
+        unshared-suffix token — the same recurrence decode uses, so SSM/conv
+        state stays correct). Driven to exhaustion it computes exactly what
+        the old blocking `_insert_slab` did."""
         prompt = req.prompt
-        sub, prefix_len = None, 0
+        sub, prefix_len, did_work = None, 0, False
         if self.prefix_cache is not None:
             entry = self.prefix_cache.match(prompt)
             if entry is not None and len(entry.tokens) >= self.prefix_min_len:
@@ -421,6 +427,7 @@ class ServingEngine:
                 boundary = min(int(req.shared_len), len(prompt) - 1)
                 if boundary >= self.prefix_min_len:
                     _, sub = self._prefill_sub(prompt[:boundary])
+                    did_work = True
                     self.stats["prefill_tokens"] += boundary
                     self.prefix_cache.insert(
                         prompt[:boundary],
@@ -431,7 +438,16 @@ class ServingEngine:
             logits, sub = self._prefill_sub(prompt)
             self.stats["prefill_tokens"] += len(prompt)
         else:
-            logits, sub = self._suffix_prefill(sub, prompt[prefix_len:])
+            logits = None
+            for t in prompt[prefix_len:]:
+                if did_work:
+                    yield               # cooperative point between tokens
+                did_work = True
+                logits, sub = self._decode(self.params,
+                                           jnp.asarray([[t]], jnp.int32), sub)
+                self.stats["prefill_invocations"] += 1
+                # each token-step attends the full max_len KV buffer
+                self.stats["prefill_ctx_positions"] += self.max_len
             self.stats["prefill_tokens"] += len(prompt) - prefix_len
         self.cache = write_slot(self.cache, sub, slot)
         return logits
@@ -527,18 +543,25 @@ class ServingEngine:
                     continue
                 raise
 
-    def _chunked_prefill(self, slot: int, state: dict, tokens: list, lpos: int):
-        """Feed `tokens` through fixed-size prefill chunks. Every chunk is
-        padded to `chunk_size` and carries its true length traced, so one
-        jit signature (per pow2-bucketed context width) serves every prompt
-        length and offset. KV is written straight into the slot's pages
-        through a context view gathered over the page table. Returns
-        (last-chunk logits, state, new logical position)."""
+    def _chunked_prefill_co(self, slot: int, state: dict, tokens: list,
+                            lpos: int, *, first: bool = True):
+        """Feed `tokens` through fixed-size prefill chunks, yielding between
+        chunks so the caller can interleave decode of live slots with this
+        insert's prefill. Every chunk is padded to `chunk_size` and carries
+        its true length traced, so one jit signature (per pow2-bucketed
+        context width) serves every prompt length and offset. KV is written
+        straight into the slot's pages through a context view gathered over
+        the page table. `first=False` yields before the first chunk too
+        (continuation of an insert that already did a prefill unit).
+        Returns (last-chunk logits, state, new logical position, first)."""
         cs, ps = self.chunk_size, self.page_size
         pages = self.slot_pages[slot]
         has_pool = bool(self.alloc.pools)
         logits, i, n = None, 0, len(tokens)
         while i < n:
+            if not first:
+                yield               # cooperative point between chunks
+            first = False
             true_clen = min(cs, n - i)
             with_images = self._extra > 0 and lpos == 0
             extra = self._extra if with_images else 0
@@ -569,7 +592,7 @@ class ServingEngine:
                 llen_pad * (n_ctx * ps if has_pool else llen_pad)
             i += true_clen
             lpos += true_clen + extra
-        return logits, state, lpos
+        return logits, state, lpos, first
 
     def _snapshot_prefix_paged(self, slot: int, prefix: list, state: dict):
         """Store a prefix entry as *page references*: full pages shared by
@@ -599,7 +622,14 @@ class ServingEngine:
                                  release=(lambda: alloc.release(ids)))
         self.stats["prefix_inserts"] += 1
 
-    def _insert_paged(self, slot: int, req: Request):
+    def _insert_paged_co(self, slot: int, req: Request):
+        """Coroutine form of the paged insert. Pages are acquired all at
+        once *before the first yield* (all-or-nothing: PagePoolExhausted
+        raises out of the first advance with every acquired ref rolled
+        back), then the prompt chunk-prefills with a yield between chunks.
+        From the first yield on, `slot_pages[slot]` owns every page ref, so
+        cancelling the coroutine mid-insert cleans up via
+        `_free_slot_pages(slot)` alone."""
         prompt = req.prompt
         plen = len(prompt)
         total = self._extra + plen
@@ -643,16 +673,17 @@ class ServingEngine:
             boundary = 0 if self.prefix_cache is None else \
                 min(int(req.shared_len), plen - 1)
             if boundary >= self.prefix_min_len:
-                _, state, lpos = self._chunked_prefill(slot, state,
-                                                       prompt[:boundary], 0)
+                _, state, lpos, first = yield from self._chunked_prefill_co(
+                    slot, state, prompt[:boundary], 0)
                 self._snapshot_prefix_paged(slot, prompt[:boundary], state)
-                logits, state, lpos = self._chunked_prefill(
-                    slot, state, prompt[boundary:], lpos)
+                logits, state, lpos, first = yield from self._chunked_prefill_co(
+                    slot, state, prompt[boundary:], lpos, first=first)
             else:
-                logits, state, lpos = self._chunked_prefill(slot, state, prompt, 0)
+                logits, state, lpos, _ = yield from self._chunked_prefill_co(
+                    slot, state, prompt, 0)
             self.stats["prefill_tokens"] += plen
         else:
-            logits, state, lpos = self._chunked_prefill(
+            logits, state, lpos, _ = yield from self._chunked_prefill_co(
                 slot, state, prompt[prefix_len:], self._extra + prefix_len)
             self.stats["prefill_tokens"] += plen - prefix_len
         self.cache = write_slot(self.cache, state, slot)
@@ -676,12 +707,21 @@ class ServingEngine:
 
     # ----------------------------------------------------------- prefill --
 
-    def _insert(self, slot: int, req: Request):
+    def _insert_co(self, slot: int, req: Request):
+        """Coroutine insert: run `req`'s (possibly chunked) prefill into
+        `slot`, yielding between prefill units so `step()` can interleave
+        decode of already-live slots with admission prefill — that
+        interleaving is what bounds time-to-first-token for running
+        requests (and p99 time-to-first-row upstream) under bursty intake.
+        The slot goes live only on completion; mid-insert it is reserved
+        via `self._inserting`. Driving the coroutine to exhaustion without
+        observing the yields is exactly the old blocking insert."""
         prompt = req.prompt
         assert self._extra + len(prompt) <= self.max_len, (
             f"prompt ({len(prompt)} + {self._extra} image/frame tokens) "
             f"exceeds cache max_len={self.max_len}")
-        logits = (self._insert_paged if self.paged else self._insert_slab)(slot, req)
+        co = (self._insert_paged_co if self.paged else self._insert_slab_co)
+        logits = yield from co(slot, req)
         nxt = int(jnp.argmax(logits[0, -1]))
         self._tokens = self._tokens.at[slot, 0].set(nxt)
         req.out.append(nxt)
@@ -690,6 +730,12 @@ class ServingEngine:
         if self.spec:
             self.drafter.on_insert(slot, req)
         self._note_kv_bytes()
+
+    def _insert(self, slot: int, req: Request):
+        """Blocking insert (legacy API, kept for tests/direct callers):
+        drain the insert coroutine in one go."""
+        for _ in self._insert_co(slot, req):
+            pass
 
     def _note_kv_bytes(self):
         used = cache_nbytes(self.cache)
@@ -902,6 +948,8 @@ class ServingEngine:
             # count only accepted tokens actually emitted: when EOS/max_new/
             # max_len truncates mid-prefix, the tail never reached the output
             self.stats["accepted_tokens"] += min(m, n_app)
+            req.draft_tokens += len(d)
+            req.accepted_tokens += min(m, n_app)
             self.stats["decode_steps_saved"] += n_app - 1
             if not done and "ssm" in ckpts:
                 keeps[s] = keep                  # batched restore below
@@ -955,26 +1003,155 @@ class ServingEngine:
             else:
                 self.queue.appendleft(req)
 
+    # ------------------------------------------------- non-blocking API ---
+
+    def _free_slot(self) -> Optional[int]:
+        """Lowest slot that is neither live nor mid-insert, or None."""
+        for s in range(self.slots):
+            if not self._live[s] and s not in self._inserting:
+                return s
+        return None
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.active) - len(self._inserting)
+
+    def estimate_pages(self, prompt_len: int, max_new: int) -> int:
+        """Pages the paged insert will demand up front for a prompt of this
+        shape (0 for the slab layout / stateless families) — the admission
+        headroom check `serving/frontend.py` gates on."""
+        if not (self.paged and self.alloc.pools):
+            return 0
+        total = self._extra + prompt_len
+        cap = min(total if self.spec else total + max_new, self.max_len)
+        return -(-cap // self.page_size)
+
+    def pool_free_pages(self) -> Optional[int]:
+        """Free pages in the KV pool (None off-paged) — interface shared
+        with `ReplicaGroup` so the frontend gates either uniformly."""
+        if not (self.paged and self.alloc.pools):
+            return None
+        return self.alloc.free_pages
+
+    def _advance_insert(self, slot: int, req: Request, gen, budget):
+        """Drive one insert coroutine until it completes or `budget`
+        prefill units are consumed (None = unbounded). Completion removes
+        it from `_inserting`; pool exhaustion rolls the slot's page refs
+        back and requeues the request at the queue head (the caller decides
+        defer vs raise). Returns the remaining budget."""
+        try:
+            while budget is None or budget > 0:
+                next(gen)
+                if budget is not None:
+                    budget -= 1
+        except StopIteration:
+            self._inserting.pop(slot, None)
+        except PagePoolExhausted:
+            self._inserting.pop(slot, None)
+            self._free_slot_pages(slot)
+            # keep the request visible: it is back at the queue head,
+            # never silently dropped (PR 2 hardening contract)
+            self.queue.appendleft(req)
+            raise
+        return budget
+
+    def poll(self, rid: int) -> Optional[Request]:
+        """Non-blocking result check: the resolved Request once it has
+        finished, failed, or been cancelled; None while still in flight."""
+        for d in (self.finished, self.failed, self.cancelled):
+            if rid in d:
+                return d[rid]
+        return None
+
+    def _resolve_cancelled(self, req: Request):
+        req.error = "cancelled"
+        req.finished_s = time.time()
+        self.cancelled[req.rid] = req
+        self.stats["cancelled"] += 1
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is in the lifecycle — queued,
+        mid-insert, or actively decoding — releasing every resource it
+        holds (slot, paged-KV refs, drafter state). The request resolves
+        into `self.cancelled` with error='cancelled'. Returns False when
+        `rid` is unknown or already resolved (cancel lost the race)."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                self._resolve_cancelled(req)
+                return True
+        for slot, (req, gen) in list(self._inserting.items()):
+            if req.rid == rid:
+                gen.close()                      # abandon mid-chunk prefill
+                del self._inserting[slot]
+                self._free_slot_pages(slot)
+                self._resolve_cancelled(req)
+                return True
+        for slot, req in list(self.active.items()):
+            if req.rid == rid:
+                del self.active[slot]
+                self._live[slot] = False
+                self._free_slot_pages(slot)
+                if self.spec:
+                    self.drafter.on_free(slot)
+                req.out.clear()
+                self._resolve_cancelled(req)
+                return True
+        return False
+
     # --------------------------------------------------------------- run ---
 
-    def step(self) -> bool:
-        """One continuous-batching round: admit queued requests into free
-        slots, then run one batched decode/verify phase. Returns whether
-        work remains. `run()` is a loop over this; `serving/replicas.py`
-        drives several engines' step() interleaved off a shared queue."""
-        while self.queue and not self._live.all():
-            slot = int(np.argmin(self._live))
-            req = self.queue.popleft()
+    def step(self, *, max_prefill_chunks: Optional[int] = None,
+             defer_admission: bool = False) -> bool:
+        """One continuous-batching round: resume in-flight chunked inserts,
+        admit queued requests into free slots, then run one batched
+        decode/verify phase. Returns whether work remains. `run()` is a
+        loop over this; `serving/replicas.py` drives several engines'
+        step() interleaved off a shared queue; `serving/frontend.py` pumps
+        it with both knobs set.
+
+        max_prefill_chunks: cap on prefill units (chunked-prefill calls /
+        slab token-steps) this round. Admission prefill becomes incremental:
+        a long prompt spreads over several rounds while already-live slots
+        keep decoding — bounding their inter-token latency. None (default)
+        drains every insert within the round, byte-identical to the old
+        blocking behaviour.
+        defer_admission: turn PagePoolExhausted during admission into
+        backpressure — the request stays at the queue head, the round keeps
+        decoding live slots (which will release pages as they finish), and
+        stats['admission_deferred'] counts the stall. The exception still
+        raises when nothing is live or inserting, i.e. waiting could never
+        free a page (and always with the default defer_admission=False)."""
+        budget = max_prefill_chunks
+        for slot in sorted(self._inserting):
+            if budget is not None and budget <= 0:
+                break
+            req, gen = self._inserting[slot]
             try:
-                self._insert(slot, req)
+                budget = self._advance_insert(slot, req, gen, budget)
             except PagePoolExhausted:
-                # keep the request visible: it is back at the queue head,
-                # never silently dropped (PR 2 hardening contract)
-                self.queue.appendleft(req)
+                if defer_admission and (self.active or self._inserting):
+                    self.stats["admission_deferred"] += 1
+                else:
+                    raise
+        while self.queue and (budget is None or budget > 0):
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req = self.queue.popleft()
+            gen = self._insert_co(slot, req)
+            self._inserting[slot] = (req, gen)
+            try:
+                budget = self._advance_insert(slot, req, gen, budget)
+            except PagePoolExhausted:
+                if defer_admission and (self.active or self._inserting):
+                    # backpressure, not failure: decode below frees pages
+                    self.stats["admission_deferred"] += 1
+                    break
                 raise
         if self.active:
             self._spec_step() if self.spec else self._step()
-        return bool(self.queue or self.active)
+        return bool(self.queue or self.active or self._inserting)
 
     def run(self, max_steps: int = 10_000, *, strict: bool = True):
         """Drain the queue. If `max_steps` is exhausted with requests still
@@ -982,10 +1159,10 @@ class ServingEngine:
         and, under `strict` (default), `RunTruncated` is raised — partial
         results must never read as complete."""
         self.stats["runs"] += 1
-        while (self.queue or self.active) and max_steps > 0:
+        while (self.queue or self.active or self._inserting) and max_steps > 0:
             max_steps -= 1
             self.step()
-        if self.queue or self.active:
+        if self.queue or self.active or self._inserting:
             self.stats["truncations"] += 1
             if strict:
                 raise RunTruncated(

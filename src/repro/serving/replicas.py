@@ -93,7 +93,8 @@ class ReplicaGroup:
         self.queue: deque = deque()
         self.queue_depth = queue_depth
         self.stats: dict = {}
-        self._own = {"runs": 0, "truncations": 0}
+        self._own = {"runs": 0, "truncations": 0, "cancelled": 0}
+        self._cancelled: dict = {}   # rid -> Request (cancelled off the shared queue)
         if isinstance(prefix_cache, PrefixCache):
             self.prefix_cache: Optional[PrefixCache] = prefix_cache
         else:
@@ -168,8 +169,30 @@ class ReplicaGroup:
         return out
 
     @property
+    def cancelled(self) -> dict:
+        out: dict = dict(self._cancelled)
+        for e in self.engines:
+            out.update(e.cancelled)
+        return out
+
+    @property
     def active_requests(self) -> int:
-        return sum(len(e.active) + len(e.queue) for e in self.engines)
+        return sum(len(e.active) + len(e.queue) + len(e._inserting)
+                   for e in self.engines)
+
+    @property
+    def free_slots(self) -> int:
+        return sum(e.free_slots for e in self.engines)
+
+    def pool_free_pages(self) -> Optional[int]:
+        """Free pages in the (shared or per-replica) KV pool — the most
+        constrained replica when pools are private. None off-paged."""
+        vals = [e.alloc.free_pages for e in self.engines
+                if e.paged and e.alloc.pools]
+        return min(vals) if vals else None
+
+    def estimate_pages(self, prompt_len: int, max_new: int) -> int:
+        return self.engines[0].estimate_pages(prompt_len, max_new)
 
     # --------------------------------------------------------------- run ---
 
@@ -187,7 +210,7 @@ class ReplicaGroup:
         while self.queue:
             best, cap = None, 0
             for eng in self.engines:
-                free = eng.slots - len(eng.active) - len(eng.queue)
+                free = eng.free_slots - len(eng.queue)
                 if free > cap:
                     best, cap = eng, free
             if best is None:
@@ -196,7 +219,52 @@ class ReplicaGroup:
 
     def _work_remains(self) -> bool:
         return bool(self.queue) or \
-            any(e.queue or e.active for e in self.engines)
+            any(e.queue or e.active or e._inserting for e in self.engines)
+
+    def step(self, *, max_prefill_chunks=None,
+             defer_admission: bool = False) -> bool:
+        """One group round: least-loaded dispatch off the shared queue,
+        then one `ServingEngine.step()` on every replica with work — the
+        non-blocking unit `serving/frontend.py` pumps. Both knobs pass
+        through to each replica (the prefill budget is per replica: they
+        model independent devices, so budgets don't share). Returns whether
+        work remains; stats are re-aggregated so long-lived references
+        observe the round."""
+        self._dispatch()
+        for eng in self.engines:
+            if eng.queue or eng.active or eng._inserting:
+                eng.step(max_prefill_chunks=max_prefill_chunks,
+                         defer_admission=defer_admission)
+        self._sync_stats()
+        return self._work_remains()
+
+    def poll(self, rid: int):
+        """Non-blocking result check across the group (None = in flight)."""
+        if rid in self._cancelled:
+            return self._cancelled[rid]
+        for eng in self.engines:
+            req = eng.poll(rid)
+            if req is not None:
+                return req
+        return None
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel wherever the request lives: the shared queue, or any
+        replica's queue/insert/active slot (resources released there)."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                req.error = "cancelled"
+                req.finished_s = time.time()
+                self._cancelled[req.rid] = req
+                self._own["cancelled"] += 1
+                self._sync_stats()
+                return True
+        for eng in self.engines:
+            if eng.cancel(rid):
+                self._sync_stats()
+                return True
+        return False
 
     def run(self, max_steps: int = 10_000, *, strict: bool = True):
         """Drain the shared queue across all replicas. Semantics mirror

@@ -1,0 +1,473 @@
+"""Async serving tier (DESIGN.md §16): admission control, fair-share
+scheduling, backpressure, cancellation and resource-leak regression.
+
+Property layer (hypothesis when available, fixed examples otherwise) runs
+against a pure-Python `FakeEngine` implementing the engine's non-blocking
+step contract (step/poll/cancel/free_slots/estimate_pages/pool_free_pages)
+so scheduling-policy invariants are checked exactly and fast:
+
+  * weighted fair share: while two tenants stay backlogged, their admitted
+    work per unit weight never diverges past the WFQ one-request bound;
+  * no starvation within a priority class: every queued ticket resolves;
+  * strict priority: a backlogged higher class always dispatches first;
+  * all-or-nothing `submit_many` under `max_queue`, and conservation:
+    submitted == completed + failed + shed + cancelled + timeouts.
+
+Integration layer drives the real `ServingEngine`: byte-identical outputs
+under chunked-prefill pumping vs. serial runs, `PagePoolExhausted` never
+escaping the frontend, and the leak regression — cancel/timeout at every
+lifecycle stage returns the paged-KV pool to its baseline free count.
+Session-level cancellation (`QueryCancelled`/`QueryTimeout`, sampling
+reservations rolled back) rides on the oracle extractor.
+"""
+import time
+from collections import deque
+
+import pytest
+
+try:                                   # hypothesis is optional in the image
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
+
+from repro.models.cache_ops import PagePoolExhausted
+from repro.serving.frontend import (ADMITTED, CANCELLED, DONE, QUEUED, SHED,
+                                    SHED_QUEUE_FULL, SHED_TOO_LARGE, TIMEOUT,
+                                    ServingFrontend)
+
+
+# ---------------------------------------------------------- fake substrate --
+
+
+class FakeEngine:
+    """Minimal deterministic engine speaking the non-blocking step API the
+    frontend schedules against: slot-bounded admission, a page pool that
+    must cover each request's estimated demand, one decode token per step,
+    `defer_admission` requeue-at-head semantics on exhaustion."""
+
+    def __init__(self, *, slots=2, max_len=64, num_pages=1000, page_size=8):
+        self.slots, self.max_len = slots, max_len
+        self.page_size, self.total_pages = page_size, num_pages
+        self._free_pages = num_pages
+        self._extra = 0
+        self.queue: deque = deque()
+        self.active: dict = {}          # rid -> (req, pages)
+        self._inserting: dict = {}      # unused: admission is atomic here
+        self.finished: dict = {}
+        self.failed: dict = {}
+        self.cancelled: dict = {}
+        self.admission_order: list = [] # rids in dispatch order (for props)
+
+    @property
+    def free_slots(self):
+        return self.slots - len(self.active)
+
+    def estimate_pages(self, prompt_len, max_new):
+        return -(-min(prompt_len + max_new, self.max_len) // self.page_size)
+
+    def pool_free_pages(self):
+        return self._free_pages
+
+    def submit(self, req):
+        self.queue.append(req)
+
+    def poll(self, rid):
+        for d in (self.finished, self.failed, self.cancelled):
+            if rid in d:
+                return d[rid]
+        return None
+
+    def cancel(self, rid):
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                self._resolve_cancel(req)
+                return True
+        if rid in self.active:
+            req, pages = self.active.pop(rid)
+            self._free_pages += pages
+            req.out.clear()
+            self._resolve_cancel(req)
+            return True
+        return False
+
+    def _resolve_cancel(self, req):
+        req.error, req.done = "cancelled", False
+        self.cancelled[req.rid] = req
+
+    def step(self, *, max_prefill_chunks=None, defer_admission=False):
+        while self.queue and self.free_slots > 0:
+            req = self.queue.popleft()
+            pages = self.estimate_pages(len(req.prompt), req.max_new)
+            if pages > self._free_pages:
+                self.queue.appendleft(req)      # hardening contract
+                if defer_admission and self.active:
+                    break
+                raise PagePoolExhausted(
+                    f"need {pages} pages, {self._free_pages} free")
+            self._free_pages -= pages
+            self.active[req.rid] = (req, pages)
+            self.admission_order.append(req.rid)
+        for rid in list(self.active):
+            req, pages = self.active[rid]
+            req.out.append((rid * 31 + len(req.out)) % 50)
+            if len(req.out) >= req.max_new:
+                del self.active[rid]
+                self._free_pages += pages
+                req.done = True
+                self.finished[rid] = req
+        return bool(self.queue or self.active)
+
+
+def _fe(engine=None, **kw):
+    return ServingFrontend(engine or FakeEngine(), **kw)
+
+
+def _prompt(n=8):
+    return list(range(n))
+
+
+# ----------------------------------------------------------- fixed intake --
+
+
+def test_ticket_lifecycle_and_poll():
+    fe = _fe()
+    t = fe.submit(_prompt(), tenant="a", max_new=3)
+    assert t.status == QUEUED and not t.done
+    fe.pump()
+    assert t.status == ADMITTED and fe.poll(t.rid) is t
+    fe.pump_until_idle()
+    assert t.status == DONE and t.done
+    assert t.out and len(t.out) == 3
+    assert t.resolved_tick >= t.admitted_tick >= t.submitted_tick
+
+
+def test_shed_too_large_prompt_and_pages():
+    fe = _fe(FakeEngine(max_len=16, num_pages=1, page_size=8))
+    t1 = fe.submit(_prompt(40), tenant="a")          # prompt over max_len
+    t2 = fe.submit(_prompt(10), tenant="a", max_new=6)   # 2 pages > pool 1
+    assert (t1.status, t1.shed_reason) == (SHED, SHED_TOO_LARGE)
+    assert (t2.status, t2.shed_reason) == (SHED, SHED_TOO_LARGE)
+    ok = fe.submit(_prompt(4), tenant="a", max_new=4)    # 1 page: fits
+    fe.pump_until_idle()
+    assert ok.status == DONE
+
+
+def test_shed_queue_full_bound():
+    fe = _fe(max_queue=2)
+    kept = [fe.submit(_prompt(), tenant="a") for _ in range(2)]
+    over = fe.submit(_prompt(), tenant="a")
+    assert (over.status, over.shed_reason) == (SHED, SHED_QUEUE_FULL)
+    fe.pump_until_idle()
+    assert all(t.status == DONE for t in kept)
+
+
+def test_submit_many_all_or_nothing():
+    fe = _fe(max_queue=4)
+    first = fe.submit_many([_prompt() for _ in range(3)], tenant="a")
+    assert all(t.status == QUEUED for t in first)
+    batch = fe.submit_many([_prompt() for _ in range(3)], tenant="b")
+    assert all((t.status, t.shed_reason) == (SHED, SHED_QUEUE_FULL)
+               for t in batch), "batch past the bound must shed wholesale"
+    assert fe.queued == 3                    # nothing half-enqueued
+    fe.pump_until_idle()
+    assert all(t.status == DONE for t in first)
+    snap = fe.tenants["b"].snapshot()
+    assert snap["submitted"] == 3 and snap["shed"] == 3
+    assert snap["queue_depth"] == 0
+
+
+# ----------------------------------------------------- cancellation/expiry --
+
+
+def test_cancel_queued_and_admitted_releases_pages():
+    eng = FakeEngine(slots=1, num_pages=8, page_size=8)
+    fe = _fe(eng)
+    base = eng.pool_free_pages()
+    t1 = fe.submit(_prompt(), tenant="a", max_new=6)
+    t2 = fe.submit(_prompt(), tenant="a", max_new=6)
+    fe.pump()                                # t1 admitted, t2 queued
+    assert t1.status == ADMITTED and t2.status == QUEUED
+    assert fe.cancel(t2) and t2.status == CANCELLED
+    assert fe.cancel(t1) and t1.status == CANCELLED
+    assert not fe.cancel(t1), "second cancel lost the race"
+    assert eng.pool_free_pages() == base, "cancel leaked pool pages"
+    fe.pump()
+    assert not fe.has_work()
+    assert fe.stats["cancelled"] == 2
+    assert fe.tenants["a"].in_flight == 0
+    assert fe.tenants["a"].pool_pages_held == 0
+
+
+def test_deadline_ticks_times_out_queued_and_inflight():
+    eng = FakeEngine(slots=1)
+    fe = _fe(eng)
+    base = eng.pool_free_pages()
+    slow = fe.submit(_prompt(), tenant="a", max_new=50, deadline_ticks=3)
+    waiting = fe.submit(_prompt(), tenant="a", max_new=4, deadline_ticks=1)
+    fe.pump()                                # slow admitted, waiting queued
+    fe.pump()                                # tick 2 > waiting's deadline
+    assert waiting.status == TIMEOUT
+    fe.pump(); fe.pump()                     # past slow's deadline in flight
+    assert slow.status == TIMEOUT
+    assert eng.pool_free_pages() == base, "timeout leaked pool pages"
+    assert fe.stats["timeouts"] == 2
+    fe.pump_until_idle()
+
+
+def test_wall_clock_deadline():
+    fe = _fe(FakeEngine(slots=1), clock="wall")
+    blocker = fe.submit(_prompt(), tenant="a", max_new=10_000)
+    t = fe.submit(_prompt(), tenant="a", deadline_s=0.0)
+    time.sleep(0.005)
+    fe.pump()
+    assert t.status == TIMEOUT
+    fe.cancel(blocker)
+
+
+# ------------------------------------------------------------ backpressure --
+
+
+def test_pool_exhaustion_defers_instead_of_raising():
+    # pool fits one request at a time; the second must wait, not explode
+    eng = FakeEngine(slots=2, num_pages=2, page_size=8, max_len=16)
+    fe = _fe(eng)
+    ts = [fe.submit(_prompt(8), tenant="a", max_new=8) for _ in range(3)]
+    fe.pump_until_idle()
+    assert all(t.status == DONE for t in ts)
+    assert fe.stats["shed"] == 0
+    assert fe.stats["deferred"] > 0, "headroom gate never engaged"
+    assert eng.pool_free_pages() == 2
+
+
+def test_pool_exhausted_absorbed_when_estimate_lies():
+    # an engine whose live demand exceeds the frontend's estimate: the
+    # raise (no active work -> defer arm unavailable) must still be
+    # absorbed, counted, and retried — callers never see the exception
+    class Lying(FakeEngine):
+        def estimate_pages(self, prompt_len, max_new):
+            return 0                    # frontend sees infinite headroom
+
+        def step(self, *, max_prefill_chunks=None, defer_admission=False):
+            if self.queue and not self.active and not self._primed:
+                self._primed = True
+                raise PagePoolExhausted("transient")
+            return super().step(max_prefill_chunks=max_prefill_chunks,
+                                defer_admission=defer_admission)
+
+    eng = Lying()
+    eng._primed = False
+    fe = _fe(eng)
+    t = fe.submit(_prompt(), tenant="a", max_new=2)
+    fe.pump_until_idle()
+    assert t.status == DONE
+    assert fe.stats["pool_exhausted_absorbed"] == 1
+
+
+# ------------------------------------------------------ scheduling properties
+
+
+def _drain_order(weights, counts, *, priorities=None, cost=8, max_new=2):
+    """Submit counts[i] requests for tenant i, pump to idle, return the
+    admission order as (tenant, rid) pairs."""
+    eng = FakeEngine(slots=1, num_pages=1000)
+    fe = _fe(eng, tenant_weights=weights)
+    tickets = {}
+    for ti, (tenant, n) in enumerate(counts.items()):
+        for j in range(n):
+            t = fe.submit(_prompt(cost), tenant=tenant, max_new=max_new,
+                          priority=(priorities or {}).get(tenant, 0))
+            tickets[t.rid] = t
+    fe.pump_until_idle()
+    order = [(tickets[rid].tenant, rid) for rid in eng.admission_order]
+    return order, tickets, fe
+
+
+def _check_fair_share(w_a, w_b, n):
+    weights = {"a": float(w_a), "b": float(w_b)}
+    order, tickets, fe = _drain_order(weights, {"a": n, "b": n})
+    assert all(t.status == DONE for t in tickets.values())   # no starvation
+    # WFQ bound while both tenants stay backlogged: admitted-per-weight
+    # can differ by at most one request's worth of virtual time
+    admitted = {"a": 0, "b": 0}
+    remaining = {"a": n, "b": n}
+    for tenant, _rid in order:
+        if min(remaining.values()) > 0:
+            gap = abs(admitted["a"] / weights["a"]
+                      - admitted["b"] / weights["b"])
+            assert gap <= 1.0 / min(weights.values()) + 1e-9, (
+                f"fair-share divergence {gap} with weights {weights}")
+        admitted[tenant] += 1
+        remaining[tenant] -= 1
+
+
+def _check_priority_strict(n):
+    order, tickets, fe = _drain_order(
+        {"hi": 1.0, "lo": 1.0}, {"hi": n, "lo": n},
+        priorities={"hi": 5, "lo": 0})
+    # every hi-class request dispatches before any lo-class one (both
+    # backlogged from tick 0 — strict classes, starvation by design)
+    kinds = [tenant for tenant, _ in order]
+    assert kinds == ["hi"] * n + ["lo"] * n
+    assert all(t.status == DONE for t in tickets.values())
+
+
+def _check_conservation(n_a, n_b, max_queue):
+    fe = _fe(FakeEngine(slots=2), max_queue=max_queue)
+    ts = [fe.submit(_prompt(), tenant="a", max_new=2) for _ in range(n_a)]
+    ts += fe.submit_many([_prompt() for _ in range(n_b)], tenant="b",
+                         max_new=2)
+    if ts:
+        fe.cancel(ts[0])
+    fe.pump_until_idle()
+    assert all(t.done for t in ts)
+    s = fe.stats
+    assert s["submitted"] == (s["completed"] + s["failed"] + s["shed"]
+                              + s["cancelled"] + s["timeouts"])
+    for snap in fe.tenant_snapshot().values():
+        assert snap["queue_depth"] == 0 and snap["in_flight"] == 0
+        assert snap["submitted"] == (snap["completed"] + snap["failed"]
+                                     + snap["shed"] + snap["cancelled"]
+                                     + snap["timeouts"])
+
+
+if st is not None:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 4), st.integers(2, 12))
+    def test_fair_share_within_wfq_bound(w_a, w_b, n):
+        _check_fair_share(w_a, w_b, n)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 8))
+    def test_priority_class_is_strict(n):
+        _check_priority_strict(n)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 8), st.integers(0, 8), st.integers(1, 10))
+    def test_accounting_conserved(n_a, n_b, max_queue):
+        _check_conservation(n_a, n_b, max_queue)
+else:
+    @pytest.mark.parametrize("w_a,w_b,n",
+                             [(1, 1, 6), (2, 1, 8), (1, 3, 5), (4, 1, 12)])
+    def test_fair_share_within_wfq_bound(w_a, w_b, n):
+        _check_fair_share(w_a, w_b, n)
+
+    @pytest.mark.parametrize("n", [1, 3, 8])
+    def test_priority_class_is_strict(n):
+        _check_priority_strict(n)
+
+    @pytest.mark.parametrize("n_a,n_b,max_queue",
+                             [(0, 0, 1), (3, 2, 10), (8, 8, 4), (1, 8, 3)])
+    def test_accounting_conserved(n_a, n_b, max_queue):
+        _check_conservation(n_a, n_b, max_queue)
+
+
+# ------------------------------------------------------- real-engine layer --
+
+
+@pytest.fixture(scope="module")
+def served():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.data import lm_data
+    from repro.models import init_params
+    from repro.serving.engine import ServingEngine
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def make(**kw):
+        kw.setdefault("slots", 2)
+        kw.setdefault("max_len", 96)
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("page_size", 16)
+        kw.setdefault("num_pages", 16)
+        return ServingEngine(cfg, params, **kw)
+    return make
+
+
+def _real_reqs(n, max_new=5):
+    from repro.data import lm_data
+    from repro.serving.engine import Request
+    return [Request(rid=i, prompt=lm_data.encode(f"probe {i} value="),
+                    max_new=max_new) for i in range(n)]
+
+
+def test_real_engine_rows_match_serial(served):
+    serial = {}
+    eng_s = served()
+    for req in _real_reqs(4):
+        eng_s.submit(req)
+        serial[req.rid] = list(eng_s.run()[req.rid].out)
+    eng = served()
+    fe = ServingFrontend(eng, max_prefill_chunks=1)
+    ts = [fe.submit(req=r, tenant=f"t{r.rid % 2}") for r in _real_reqs(4)]
+    fe.pump_until_idle()
+    assert all(t.status == DONE for t in ts)
+    assert {t.rid: list(t.req.out) for t in ts} == serial
+
+
+def test_real_engine_leak_regression_on_cancel_and_timeout(served):
+    eng = served(prefix_cache=True)
+    fe = ServingFrontend(eng, max_prefill_chunks=1)
+    base = eng.pool_free_pages()
+    reqs = _real_reqs(4, max_new=20)
+    cancelled_mid = fe.submit(req=reqs[0], tenant="a")
+    timed_out = fe.submit(req=reqs[1], tenant="a", deadline_ticks=2)
+    cancelled_queued = fe.submit(req=reqs[2], tenant="b")
+    survivor = fe.submit(req=reqs[3], tenant="b")
+    fe.cancel(cancelled_queued)              # still QUEUED: no engine state
+    fe.pump()                                # first two mid-insert/active
+    fe.cancel(cancelled_mid)
+    fe.pump(); fe.pump()                     # deadline passes in flight
+    fe.pump_until_idle()
+    assert cancelled_mid.status == CANCELLED
+    assert timed_out.status == TIMEOUT
+    assert cancelled_queued.status == CANCELLED
+    assert survivor.status == DONE
+    eng.prefix_cache.clear()                 # cache-held pages are accounted
+    assert eng.pool_free_pages() == base, "lifecycle exit leaked KV pages"
+
+
+def test_real_engine_backpressure_never_raises(served):
+    # pool fits ~one request; the rest defer/absorb, never raise
+    eng = served(num_pages=4, prefix_cache=False)
+    fe = ServingFrontend(eng, max_prefill_chunks=1)
+    base = eng.pool_free_pages()             # num_pages minus the sink page
+    ts = [fe.submit(req=r, tenant="a") for r in _real_reqs(3, max_new=8)]
+    fe.pump_until_idle()
+    assert all(t.status == DONE for t in ts)
+    assert fe.stats["deferred"] + fe.stats["pool_exhausted_absorbed"] + \
+        eng.stats["admission_deferred"] > 0
+    assert eng.pool_free_pages() == base
+
+
+# ------------------------------------------------------------ session layer --
+
+
+def test_session_cancel_and_timeout_release_sampling():
+    from repro.core import (QueryCancelled, QueryTimeout, Session, Filter,
+                            Query, conj)
+    from repro.data.corpus import make_wiki_corpus
+    from repro.extract import OracleExtractor
+    from repro.index.retriever import TwoLevelRetriever
+    corpus = make_wiki_corpus(seed=0)
+    q = Query(tables=["players"], select=[("players", "player_name")],
+              where=conj(Filter("age", ">", 30, table="players"),
+                         Filter("all_stars", ">=", 5, table="players")))
+    sess = Session(TwoLevelRetriever(corpus), OracleExtractor(corpus),
+                   batch_size=4)
+    h = sess.submit(q, tenant="acme")
+    sess._step()                             # mid-sampling: owns reservation
+    assert h.cancel() and not h.cancel()
+    with pytest.raises(QueryCancelled):
+        h.result()
+    assert not sess._samples, "cancel left a sampling reservation behind"
+    # the session still works: a fresh submit runs to completion, and a
+    # zero-deadline one times out with the typed subclass
+    ref = sess.execute(q)
+    assert ref.rows is not None
+    h2 = sess.submit(q, deadline_s=0.0)
+    time.sleep(0.005)
+    with pytest.raises(QueryTimeout):
+        h2.result()
+    assert not sess._active
