@@ -18,13 +18,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="baselines|filter_groups|ordering|join|ablations|"
                          "kernels|roofline|batching|prefix_cache|multi_query|"
-                         "paged_kv")
+                         "paged_kv|spec_decode|sharded_serving|serve_load|"
+                         "live_corpus")
     args = ap.parse_args()
 
     from . import (bench_ablations, bench_baselines, bench_batching,
                    bench_filter_groups, bench_join, bench_kernels,
-                   bench_multi_query, bench_ordering, bench_paged_kv,
-                   bench_prefix_cache, bench_roofline, bench_spec_decode)
+                   bench_live_corpus, bench_multi_query, bench_ordering,
+                   bench_paged_kv, bench_prefix_cache, bench_roofline,
+                   bench_serve_load, bench_sharded_serving, bench_spec_decode)
     from .common import BenchContext
 
     ctx = BenchContext()
@@ -35,6 +37,9 @@ def main() -> None:
         "multi_query": lambda: bench_multi_query.run(quick=args.quick),
         "paged_kv": lambda: bench_paged_kv.run(quick=args.quick),
         "spec_decode": lambda: bench_spec_decode.run(quick=args.quick),
+        "sharded_serving": lambda: bench_sharded_serving.run(quick=args.quick),
+        "serve_load": lambda: bench_serve_load.run(quick=args.quick),
+        "live_corpus": lambda: bench_live_corpus.run(quick=args.quick),
         "ordering": lambda: bench_ordering.run(ctx, quick=args.quick),
         "join": lambda: bench_join.run(ctx, quick=args.quick),
         "filter_groups": lambda: bench_filter_groups.run(ctx, quick=args.quick),

@@ -79,6 +79,9 @@ class TableSample:
     attrs: frozenset
     stats: SampleStats
     sampled: list
+    # corpus mutation-log seq at publish time (live corpora only): a sample
+    # stamped below the current seq is stale evidence for exact invalidation
+    version: int = 0
 
 
 @dataclass
@@ -240,7 +243,7 @@ class QueryRun:
                 stats.record(doc_id, attr, v, inp_tokens // max(len(attrs), 1), segs)
                 self._cache[(doc_id, attr)] = v
                 if segs:
-                    self.retriever.add_evidence(table, attr, segs)
+                    self.retriever.add_evidence(table, attr, segs, doc_id=doc_id)
         stats.n_sampled = len(sampled)
         self.retriever.finalize_thresholds(table, attrs, stats)
         yield ("sample_publish",

@@ -190,6 +190,24 @@ class QueryHandle:
         parent = (session._tenant_ledger(tenant) if tenant
                   else session.ledger)
         self.ledger = parent.child()
+        self._make_run()
+        self.reservations: set = set()      # tables whose sampling we own
+        self.acquired: set = set()          # tables we hold/held for execution
+        self._rows: list = []
+        self._done = False
+        self._error: Optional[BaseException] = None
+        self._result: Optional[QueryResult] = None
+        self._t0 = time.time()
+        self.deadline = (self._t0 + deadline_s
+                         if deadline_s is not None else None)
+
+    def _make_run(self) -> None:
+        """(Re-)build the query's execution state machine from current
+        session state. Called at submit, and again by `LiveSession` when a
+        corpus mutation restarts an in-flight query: the fresh QueryRun
+        sees the post-mutation snapshot, same seed (sampling parity with a
+        fresh session), charges still on this handle's ledger."""
+        session = self.session
         self.run = QueryRun(
             self.query, retriever=session.retriever,
             extractor=session.extractor, cache=session.cache,
@@ -201,15 +219,6 @@ class QueryHandle:
         self.gen = self.run.run_co()
         self.barrier = None
         self.send_value = None
-        self.reservations: set = set()      # tables whose sampling we own
-        self.acquired: set = set()          # tables we hold/held for execution
-        self._rows: list = []
-        self._done = False
-        self._error: Optional[BaseException] = None
-        self._result: Optional[QueryResult] = None
-        self._t0 = time.time()
-        self.deadline = (self._t0 + deadline_s
-                         if deadline_s is not None else None)
 
     # -- consumption ------------------------------------------------------
 
@@ -657,10 +666,15 @@ class Session:
                 self._escalated.add(k)
                 flat.append((k[0], k[1], h))
         bs = self.scheduler.batch_size
+        # extractors may expose a dedicated escalation entry point (served:
+        # doc-first prompt layout so full-document retries share the doc
+        # prefix KV across attrs); default to the plain batch path
+        run_batch = getattr(self.extractor, "escalate_batch",
+                            self.extractor.extract_batch)
         for i in range(0, len(flat), bs):
             chunk = flat[i:i + bs]
             batch = [(d, a, [corpus.docs[d].text]) for d, a, _h in chunk]
-            out = self.extractor.extract_batch(batch)
+            out = run_batch(batch)
             self.ledger.record_batch(len(batch))
             self.scheduler.record_owner_batches(h.ledger for _d, _a, h in chunk)
             for (d, a, h), (value, inp_tokens) in zip(chunk, out):
@@ -671,6 +685,36 @@ class Session:
         for _h, b in escalations:
             b.value = {k: self.cache.get(k) for k in b.keys}
             b.ready = True
+
+    # --------------------------------------------- live-corpus invalidation --
+
+    def drop_doc_state(self, doc_id) -> dict:
+        """Exact per-document invalidation (DESIGN.md §17): remove every
+        cached attr value and escalation memo keyed to `doc_id`. Called by
+        the live cascade when the document mutates — a stale value must
+        never satisfy a post-mutation query. Returns drop counts."""
+        cache_keys = [k for k in self.cache if k[0] == doc_id]
+        for k in cache_keys:
+            del self.cache[k]
+        esc_keys = [k for k in self._escalated if k[0] == doc_id]
+        self._escalated.difference_update(esc_keys)
+        return {"cache_entries": len(cache_keys),
+                "escalations": len(esc_keys)}
+
+    def invalidate_table_sample(self, table: str) -> bool:
+        """Drop `table`'s sampling investment: the published sample is
+        removed (next query re-samples), and an in-progress reservation
+        loses its stale `prior` (the owner's sweep still publishes, built
+        from post-mutation extractions). Returns True if anything
+        dropped."""
+        cur = self._samples.get(table)
+        if isinstance(cur, TableSample):
+            del self._samples[table]
+            return True
+        if isinstance(cur, _SampleReservation) and cur.prior is not None:
+            cur.prior = None
+            return True
+        return False
 
     # ------------------------------------------------- sampling ownership --
 

@@ -54,6 +54,11 @@ class Document:
     truth: dict = field(default_factory=dict)   # attr -> value
     spans: dict = field(default_factory=dict)   # attr -> sentence containing it
     tokens: int = 0
+    # live-corpus manifest identity (repro.live, DESIGN.md §17): version
+    # bumps per mutation, sha is the blake2b-128 content hash of `text`.
+    # Static corpora keep version 0 / sha "" until wrapped in a LiveCorpus.
+    version: int = 0
+    sha: str = ""
     # retriever protocol expects .table = owning domain
     @property
     def table(self):

@@ -54,17 +54,27 @@ class ServedExtractor:
     accepts_owners = True
 
     def __init__(self, corpus, engine: ServingEngine, *, max_new: int = 12,
-                 oracle_fallback: bool = True, frontend=None):
+                 oracle_fallback: bool = True, frontend=None,
+                 doc_prefix_escalation: bool = False):
         """frontend: optional `serving.frontend.ServingFrontend` fronting
         `engine`. When set, every extraction round routes through its
         admission queue (per-tenant fair share, page-headroom backpressure)
         instead of submitting straight to the engine — rows stay
-        byte-identical, scheduling policy changes."""
+        byte-identical, scheduling policy changes.
+
+        doc_prefix_escalation: lay full-document escalation prompts
+        document-first (the document text is the shareable prefix, the
+        attribute question the tail), so several attrs escalated on the
+        same document share its prefill KV. Those entries embed document
+        text, so a live-corpus mutation of the doc invalidates them
+        (DESIGN.md §17) — which is exactly why the default template-first
+        layout keeps its prefix entries mutation-immune."""
         self.corpus = corpus
         self.engine = engine
         self.frontend = frontend
         self.max_new = max_new
         self.oracle_fallback = oracle_fallback
+        self.doc_prefix_escalation = doc_prefix_escalation
         self.stats = ServedStats()
         self._rid = 0
 
@@ -87,10 +97,13 @@ class ServedExtractor:
         tenant = getattr(owner, "tenant", "") or "default"
         return tenant, 0
 
-    def _make_request(self, prefix_text: str, tail_text: str,
-                      owner=None) -> Request:
+    def _make_request(self, prefix_text: str, tail_text: str, owner=None,
+                      content_docs=(), content_in_prefix=False) -> Request:
         """Build a request from (shareable prefix, per-request tail); the
-        tail is truncated to the token budget, never the prefix boundary."""
+        tail is truncated to the token budget, never the prefix boundary.
+        `content_docs` records which documents' text the prompt embeds and
+        `content_in_prefix` where it starts (prefix vs tail) — the engine
+        tags prefix-cache entries with it for live-corpus invalidation."""
         cap = 4 * MAX_PROMPT_TOKENS
         prefix = lm_data.encode(prefix_text)[:cap]
         toks = prefix + lm_data.encode(tail_text)[:cap - len(prefix)]
@@ -101,7 +114,11 @@ class ServedExtractor:
         return Request(rid=self._rid, prompt=toks or [lm_data.BOS],
                        max_new=self.max_new, eos_id=lm_data.EOS,
                        shared_len=min(len(prefix), max(len(toks) - 1, 0)),
-                       tenant=tenant, priority=priority)
+                       tenant=tenant, priority=priority,
+                       content_docs=tuple(content_docs),
+                       content_start=(0 if content_in_prefix
+                                      else len(prefix)) if content_docs
+                                     else None)
 
     def _run_round_frontend(self, reqs: list) -> dict:
         """Admission-tier round: requests queue under their tenants' fair
@@ -207,7 +224,42 @@ class ServedExtractor:
                 continue
             req = self._make_request(self._prompt_prefix(doc_id, attr),
                                      f"{text} Answer:",
-                                     owner=owners[i] if owners else None)
+                                     owner=owners[i] if owners else None,
+                                     content_docs=(doc_id,))
+            reqs.append(req)
+            meta.append((i, doc_id, attr, text, count_tokens(text), req.rid))
+        if reqs:
+            outs = self._run_round(reqs)
+            for i, doc_id, attr, text, tokens, rid in meta:
+                results[i] = (self._parse(doc_id, attr, outs[rid], text), tokens)
+        return results
+
+    def escalate_batch(self, items: list, owners: list = None):
+        """Full-document escalation rounds (session `_resolve_escalations`
+        dispatches here). Default layout delegates to `extract_batch`
+        (template-first, prefix entries mutation-immune); with
+        `doc_prefix_escalation` on, prompts go document-first so the N
+        attrs escalated on one document share its prefill KV — those
+        entries are doc-tagged and fall to `invalidate_docs` when the
+        document mutates."""
+        if not self.doc_prefix_escalation:
+            return self.extract_batch(items, owners)
+        results: list = [None] * len(items)
+        reqs, meta = [], []
+        for i, (doc_id, attr, segments) in enumerate(items):
+            text = " ".join(segments)
+            if not text:
+                results[i] = (None, 0)
+                continue
+            doc = self.corpus.docs[doc_id]
+            table = doc.table
+            desc = self.corpus.attr_description(table, attr)
+            req = self._make_request(
+                f"Document evidence: {text} ",
+                f"Task: report the value of one attribute. "
+                f"Attribute: {attr} ({desc}). Answer:",
+                owner=owners[i] if owners else None,
+                content_docs=(doc_id,), content_in_prefix=True)
             reqs.append(req)
             meta.append((i, doc_id, attr, text, count_tokens(text), req.rid))
         if reqs:
@@ -241,7 +293,8 @@ class ServedExtractor:
             doc = self.corpus.docs[doc_id]
             reqs.append(self._make_request(
                 f"Task: extract {', '.join(attrs)}. Document: ",
-                doc.text[:800], owner=owners[i] if owners else None))
+                doc.text[:800], owner=owners[i] if owners else None,
+                content_docs=(doc_id,)))
         if reqs:
             self._run_round(reqs)
         return results

@@ -39,6 +39,7 @@ def synth_evidence_texts(attr: str, description: str) -> list[str]:
 @dataclass
 class _AttrState:
     evidence_texts: list = field(default_factory=list)
+    evidence_docs: list = field(default_factory=list)  # provenance, parallel
     evidence_emb: np.ndarray | None = None
     probes: np.ndarray | None = None       # kmeans centers
     probe_radii: np.ndarray | None = None  # per-cluster radii (beyond-paper)
@@ -53,7 +54,8 @@ class TwoLevelRetriever:
                  per_evidence_radius: bool = True,
                  cluster_radius_floor: float = 1.3,
                  approx_threshold: int = 2048,
-                 ivf_n_lists: int = 64, ivf_nprobe: int = 8):
+                 ivf_n_lists: int = 64, ivf_nprobe: int = 8,
+                 refit_idf: bool = True):
         self.corpus = corpus
         self.embedder = embedder or HashedEmbedder()
         self.mode = mode
@@ -69,6 +71,11 @@ class TwoLevelRetriever:
         self.approx_threshold = approx_threshold
         self.ivf_n_lists = ivf_n_lists
         self.ivf_nprobe = ivf_nprobe
+        # refit_idf=False builds on the embedder's existing idf — the
+        # rebuild-from-scratch parity oracle of a live corpus must share the
+        # live retriever's frozen idf (live mutation never refits; DESIGN.md
+        # §17), so the rebuilt embeddings stay byte-identical.
+        self.refit_idf = refit_idf
         self._version = 0
         self._attr_state: dict = {}         # (table, attr) -> _AttrState
         self._tau: dict = {}                # table -> refined tau
@@ -116,8 +123,9 @@ class TwoLevelRetriever:
             doc_ids.append(doc_id)
             summaries.append(key_sentences(doc.text))
         # idf over the whole segment collection sharpens domain separation
-        all_seg_texts = [s.text for segs in self.doc_segments.values() for s in segs]
-        self.embedder.fit(all_seg_texts)
+        if self.refit_idf:
+            all_seg_texts = [s.text for segs in self.doc_segments.values() for s in segs]
+            self.embedder.fit(all_seg_texts)
         for doc_id in doc_ids:
             segs = self.doc_segments[doc_id]
             embs = self.embedder.embed([s.text for s in segs])
@@ -170,12 +178,49 @@ class TwoLevelRetriever:
 
     # ----------------------------------------------------- evidence --------
 
-    def add_evidence(self, table: str, attr: str, segments: list):
+    def add_evidence(self, table: str, attr: str, segments: list, doc_id=None):
+        """`doc_id` records provenance: under a live corpus, evidence
+        collected from a document that later mutates must be dropped
+        (`absorb_doc_churn`), and provenance is what identifies it."""
         if self.mode in ("no_evidence", "rag_topk", "fulldoc", "llm_evidence"):
             return
         st = self._state(table, attr)
         st.evidence_texts.extend(segments)
+        st.evidence_docs.extend([doc_id] * len(segments))
         self._version += 1
+
+    def reset_table_state(self, table: str) -> None:
+        """Drop every piece of per-query-derived state for `table`:
+        evidence, probes, refined tau, and the evidence-centered doc query.
+        The live cascade calls this when a mutation invalidates the sample
+        the state was fitted from (DESIGN.md §17) — the next query re-samples
+        and re-fits from scratch, exactly like a fresh session."""
+        for key in [k for k in self._attr_state if k[0] == table]:
+            del self._attr_state[key]
+        self._tau.pop(table, None)
+        self._doc_center.pop(table, None)
+        self._version += 1
+
+    def absorb_doc_churn(self, doc_id) -> int:
+        """Drop evidence that originated in `doc_id` and re-fit the probe
+        clusters of every attr that held some — incremental absorption of
+        segment churn (the evidence cluster geometry follows the corpus
+        without a global rebuild). Returns the number of evidence texts
+        dropped."""
+        dropped = 0
+        for (table, attr), st in list(self._attr_state.items()):
+            if doc_id not in st.evidence_docs:
+                continue
+            keep = [i for i, d in enumerate(st.evidence_docs) if d != doc_id]
+            dropped += len(st.evidence_docs) - len(keep)
+            st.evidence_texts = [st.evidence_texts[i] for i in keep]
+            st.evidence_docs = [st.evidence_docs[i] for i in keep]
+            if st.probes is not None:
+                # state was finalized: re-fit this attr's probes in place
+                self._fit_attr_probes(table, attr)
+        if dropped:
+            self._version += 1
+        return dropped
 
     def finalize_thresholds(self, table: str, attrs: list, stats):
         """Automatic tau/gamma (paper §4.2 'Setting the Threshold')."""
@@ -212,44 +257,51 @@ class TwoLevelRetriever:
             self._tau[table] = tau
         # gamma_i per attr + evidence clustering
         for attr in attrs:
-            st = self._state(table, attr)
-            texts = st.evidence_texts
-            if self.mode == "llm_evidence" or (self.mode == "quest" and not texts):
-                texts = synth_evidence_texts(attr, self.corpus.attr_description(table, attr))
-                st.evidence_texts = texts
-            if self.mode == "no_evidence" or not texts:
-                st.probes = self._attr_query_emb(table, attr)[None]
-                st.gamma = self.gamma_init
-                continue
-            embs = self.embedder.embed(texts)
-            st.evidence_emb = embs
-            centers, assign = kmeans(embs, min(self.evidence_k, len(texts)), seed=7)
-            norms = np.maximum(np.linalg.norm(centers, axis=1, keepdims=True), 1e-6)
-            st.probes = centers / norms
-            # Beyond-paper (DESIGN.md §8): *per-cluster* radii. The paper's
-            # global gamma = max pairwise evidence distance explodes when
-            # evidence spans several phrasing templates (it then swallows
-            # whole documents on long corpora); each k-means cluster is one
-            # template, whose members sit tightly around their center.
-            if self.per_evidence_radius:
-                radii = []
-                for j in range(len(centers)):
-                    members = embs[assign == j]
-                    if len(members):
-                        dj = np.sqrt(np.maximum(
-                            ((members - st.probes[j]) ** 2).sum(-1), 0.0)).max()
-                    else:
-                        dj = 0.0
-                    radii.append(max(dj + self.slack, self.cluster_radius_floor))
-                st.probe_radii = np.asarray(radii)
-            if len(embs) >= 2:
-                d = np.sqrt(np.maximum(
-                    ((embs[:, None] - embs[None]) ** 2).sum(-1), 0.0))
-                # paper rule, floored at gamma_init: a tight sample must not
-                # collapse the radius (used when per_evidence_radius=False)
-                st.gamma = max(float(d.max()) + self.slack, self.gamma_init)
-            else:
-                st.gamma = self.gamma_init
+            self._fit_attr_probes(table, attr)
+
+    def _fit_attr_probes(self, table: str, attr: str) -> None:
+        """(Re-)fit one attr's probe clusters from its current evidence —
+        the per-attr tail of `finalize_thresholds`, also invoked standalone
+        by `absorb_doc_churn` when live mutations drop evidence texts."""
+        st = self._state(table, attr)
+        texts = st.evidence_texts
+        if self.mode == "llm_evidence" or (self.mode == "quest" and not texts):
+            texts = synth_evidence_texts(attr, self.corpus.attr_description(table, attr))
+            st.evidence_texts = texts
+            st.evidence_docs = [None] * len(texts)
+        if self.mode == "no_evidence" or not texts:
+            st.probes = self._attr_query_emb(table, attr)[None]
+            st.gamma = self.gamma_init
+            return
+        embs = self.embedder.embed(texts)
+        st.evidence_emb = embs
+        centers, assign = kmeans(embs, min(self.evidence_k, len(texts)), seed=7)
+        norms = np.maximum(np.linalg.norm(centers, axis=1, keepdims=True), 1e-6)
+        st.probes = centers / norms
+        # Beyond-paper (DESIGN.md §8): *per-cluster* radii. The paper's
+        # global gamma = max pairwise evidence distance explodes when
+        # evidence spans several phrasing templates (it then swallows
+        # whole documents on long corpora); each k-means cluster is one
+        # template, whose members sit tightly around their center.
+        if self.per_evidence_radius:
+            radii = []
+            for j in range(len(centers)):
+                members = embs[assign == j]
+                if len(members):
+                    dj = np.sqrt(np.maximum(
+                        ((members - st.probes[j]) ** 2).sum(-1), 0.0)).max()
+                else:
+                    dj = 0.0
+                radii.append(max(dj + self.slack, self.cluster_radius_floor))
+            st.probe_radii = np.asarray(radii)
+        if len(embs) >= 2:
+            d = np.sqrt(np.maximum(
+                ((embs[:, None] - embs[None]) ** 2).sum(-1), 0.0))
+            # paper rule, floored at gamma_init: a tight sample must not
+            # collapse the radius (used when per_evidence_radius=False)
+            st.gamma = max(float(d.max()) + self.slack, self.gamma_init)
+        else:
+            st.gamma = self.gamma_init
 
     # ------------------------------------------------------ segment level --
 

@@ -21,28 +21,96 @@ def _topk_l2(db: np.ndarray, q: np.ndarray, k: int):
     return ops.topk_l2(db, q, k)
 
 
-def _exact_distance(emb: np.ndarray, ids: list, q: np.ndarray, id_) -> float:
-    i = ids.index(id_)
-    return float(np.sqrt(((emb[i] - q) ** 2).sum()))
+def _live_distance(emb: np.ndarray, ids: list, dead: np.ndarray,
+                   q: np.ndarray, id_) -> float:
+    """Distance to the *live* occurrence of `id_` (scanned newest-first:
+    a re-added id's tombstoned old row never shadows the live one)."""
+    for i in range(len(ids) - 1, -1, -1):
+        if ids[i] == id_ and not dead[i]:
+            return float(np.sqrt(((emb[i] - q) ** 2).sum()))
+    raise ValueError(f"{id_!r} is not in the index")
 
 
 class ExactIndex:
-    def __init__(self, embeddings: np.ndarray, ids: list | None = None):
+    """Exact store, now incrementally maintainable (DESIGN.md §17):
+    `add` appends rows, `remove` tombstones them (searches filter dead
+    rows), and compaction rebuilds the dense arrays once the dead fraction
+    crosses `compact_ratio` — removal cost stays amortized O(1) per row
+    instead of O(N) per mutation."""
+
+    def __init__(self, embeddings: np.ndarray, ids: list | None = None, *,
+                 compact_ratio: float = 0.25):
         self.emb = np.asarray(embeddings, np.float32)
         self.ids = list(ids) if ids is not None else list(range(len(self.emb)))
+        self.compact_ratio = compact_ratio
+        self._dead = np.zeros(len(self.ids), bool)
+        self._n_dead = 0
+        self.maint_stats = {"adds": 0, "removes": 0, "compactions": 0}
 
     def __len__(self):
-        return len(self.ids)
+        return len(self.ids) - self._n_dead
+
+    # -------------------------------------------------------- maintenance --
+
+    @property
+    def n_tombstones(self) -> int:
+        return self._n_dead
+
+    def live_ids(self) -> list:
+        if not self._n_dead:
+            return list(self.ids)
+        return [id_ for i, id_ in enumerate(self.ids) if not self._dead[i]]
+
+    def add(self, embeddings: np.ndarray, ids: list) -> None:
+        embs = np.atleast_2d(np.asarray(embeddings, np.float32))
+        self.emb = embs.copy() if not len(self.ids) else \
+            np.concatenate([self.emb, embs])
+        self.ids.extend(ids)
+        self._dead = np.concatenate([self._dead, np.zeros(len(embs), bool)])
+        self.maint_stats["adds"] += len(embs)
+
+    def remove(self, ids) -> int:
+        """Tombstone every live row carrying one of `ids`; compacts when
+        the dead fraction crosses `compact_ratio`. Returns rows removed."""
+        idset = set(ids)
+        n = 0
+        for i, id_ in enumerate(self.ids):
+            if id_ in idset and not self._dead[i]:
+                self._dead[i] = True
+                n += 1
+        self._n_dead += n
+        self.maint_stats["removes"] += n
+        if self.ids and self._n_dead > self.compact_ratio * len(self.ids):
+            self.compact()
+        return n
+
+    def compact(self) -> None:
+        if not self._n_dead:
+            return
+        keep = ~self._dead
+        self.emb = self.emb[keep]
+        self.ids = [id_ for i, id_ in enumerate(self.ids) if keep[i]]
+        self._dead = np.zeros(len(self.ids), bool)
+        self._n_dead = 0
+        self.maint_stats["compactions"] += 1
+
+    # ------------------------------------------------------------- search --
 
     def search(self, q: np.ndarray, k: int):
         """q: (d,) or (m, d). Returns (ids, dists) per query."""
         q = np.atleast_2d(np.asarray(q, np.float32))
-        k = min(k, len(self.ids))
-        if k == 0 or not len(self.ids):
+        k = min(k, len(self))
+        if k == 0 or not len(self):
             return [([], [])] * len(q)
-        dists, idx = _topk_l2(self.emb, q, k)
+        # over-fetch by the tombstone count so dead rows can never displace
+        # live ones from the top-k, then filter per row
+        kk = min(k + self._n_dead, len(self.ids))
+        dists, idx = _topk_l2(self.emb, q, kk)
         out = []
         for row_d, row_i in zip(np.asarray(dists), np.asarray(idx)):
+            if self._n_dead:
+                keep = ~self._dead[np.asarray(row_i, int)]
+                row_d, row_i = row_d[keep][:k], row_i[keep][:k]
             out.append(([self.ids[int(i)] for i in row_i], [float(d) for d in row_d]))
         return out
 
@@ -71,18 +139,20 @@ class ExactIndex:
         path the cross-document scheduler uses to retrieve segments for a
         batch of (doc, attr) pairs at once."""
         qs = np.atleast_2d(np.asarray(qs, np.float32))
-        if not len(self.ids):
+        if not len(self):
             return [([], [])] * len(qs)
         dists, idx = self._ranked(qs)
         out = []
         for row_d, row_i, tau in zip(dists, idx, taus):
             keep = row_d < tau
+            if self._n_dead:
+                keep = keep & ~self._dead[np.asarray(row_i, int)]
             out.append(([self.ids[int(i)] for i in row_i[keep]],
                         [float(d) for d in row_d[keep]]))
         return out
 
     def distance(self, q: np.ndarray, id_) -> float:
-        return _exact_distance(self.emb, self.ids, q, id_)
+        return _live_distance(self.emb, self.ids, self._dead, q, id_)
 
 
 class IVFIndex:
@@ -93,23 +163,135 @@ class IVFIndex:
     probed lists become dense tiles for the topk_l2 kernel)."""
 
     def __init__(self, embeddings: np.ndarray, ids: list | None = None,
-                 n_lists: int = 16, nprobe: int = 4, seed: int = 0):
+                 n_lists: int = 16, nprobe: int = 4, seed: int = 0, *,
+                 recluster_ratio: float = 0.5, compact_ratio: float = 0.25):
         self.emb = np.asarray(embeddings, np.float32)
         self.ids = list(ids) if ids is not None else list(range(len(self.emb)))
         n_lists = max(1, min(n_lists, len(self.ids)))
         self.nprobe = max(1, min(nprobe, n_lists))
-        self.centers, assign = kmeans(self.emb, n_lists, seed=seed)
+        centers, assign = kmeans(self.emb, n_lists, seed=seed)
+        self.centers = np.array(centers, np.float32)  # writable: reclustering re-centers in place
         self.lists = [np.where(assign == c)[0] for c in range(len(self.centers))]
+        # incremental maintenance (DESIGN.md §17): adds route to the nearest
+        # center, removes tombstone; once a list's churn (adds+removes since
+        # its last recluster) crosses recluster_ratio x its live size, that
+        # list alone is re-centered and its members reassigned — bounded by
+        # the list, never a global k-means rebuild.
+        self.recluster_ratio = recluster_ratio
+        self.compact_ratio = compact_ratio
+        self._row_list = np.asarray(assign, np.int64).copy()  # row -> list
+        self._dead = np.zeros(len(self.ids), bool)
+        self._n_dead = 0
+        self._churn = np.zeros(len(self.lists), np.int64)
+        self.maint_stats = {"adds": 0, "removes": 0, "reclustered_lists": 0,
+                            "migrated_rows": 0, "compactions": 0}
 
     def __len__(self):
-        return len(self.ids)
+        return len(self.ids) - self._n_dead
+
+    # -------------------------------------------------------- maintenance --
+
+    @property
+    def n_tombstones(self) -> int:
+        return self._n_dead
+
+    def live_ids(self) -> list:
+        if not self._n_dead:
+            return list(self.ids)
+        return [id_ for i, id_ in enumerate(self.ids) if not self._dead[i]]
+
+    def add(self, embeddings: np.ndarray, ids: list) -> None:
+        embs = np.atleast_2d(np.asarray(embeddings, np.float32))
+        base = len(self.ids)
+        self.emb = embs.copy() if not base else np.concatenate([self.emb, embs])
+        self.ids.extend(ids)
+        self._dead = np.concatenate([self._dead, np.zeros(len(embs), bool)])
+        assign = np.argmin(
+            ((self.centers[None] - embs[:, None]) ** 2).sum(-1), axis=1)
+        self._row_list = np.concatenate([self._row_list, assign])
+        touched = set()
+        for off, li in enumerate(assign):
+            li = int(li)
+            self.lists[li] = np.append(self.lists[li], base + off)
+            self._churn[li] += 1
+            touched.add(li)
+        self.maint_stats["adds"] += len(embs)
+        for li in touched:
+            self._maybe_recluster(li)
+
+    def remove(self, ids) -> int:
+        idset = set(ids)
+        touched, n = set(), 0
+        for i, id_ in enumerate(self.ids):
+            if id_ in idset and not self._dead[i]:
+                self._dead[i] = True
+                li = int(self._row_list[i])
+                self._churn[li] += 1
+                touched.add(li)
+                n += 1
+        self._n_dead += n
+        self.maint_stats["removes"] += n
+        for li in touched:
+            self._maybe_recluster(li)
+        if self.ids and self._n_dead > self.compact_ratio * len(self.ids):
+            self.compact()
+        return n
+
+    def _maybe_recluster(self, li: int) -> None:
+        """Bounded per-list re-clustering: when churn crosses the ratio,
+        drop the list's tombstoned rows, re-center it on its live members
+        (k=1 k-means), and migrate members whose nearest center moved —
+        work proportional to one list, never the whole index."""
+        rows = self.lists[li]
+        live = rows[~self._dead[rows]] if len(rows) else rows
+        if self._churn[li] <= self.recluster_ratio * max(len(live), 1):
+            return
+        self._churn[li] = 0
+        self.maint_stats["reclustered_lists"] += 1
+        if not len(live):
+            self.lists[li] = live
+            return
+        c = self.emb[live].mean(axis=0)
+        self.centers[li] = c
+        # reassign this list's members only (no recursive recluster: churn
+        # lands on the target list and settles on its own threshold)
+        assign = np.argmin(
+            ((self.centers[None] - self.emb[live][:, None]) ** 2).sum(-1),
+            axis=1)
+        stay = live[assign == li]
+        for row, tgt in zip(live[assign != li], assign[assign != li]):
+            tgt = int(tgt)
+            self.lists[tgt] = np.append(self.lists[tgt], row)
+            self._row_list[row] = tgt
+            self._churn[tgt] += 1
+            self.maint_stats["migrated_rows"] += 1
+        self.lists[li] = stay
+
+    def compact(self) -> None:
+        if not self._n_dead:
+            return
+        keep = ~self._dead
+        new_row = np.cumsum(keep) - 1        # old row -> new row (keep only)
+        self.emb = self.emb[keep]
+        self.ids = [id_ for i, id_ in enumerate(self.ids) if keep[i]]
+        self._row_list = self._row_list[keep]
+        self.lists = [new_row[rows[keep[rows]]] if len(rows) else rows
+                      for rows in self.lists]
+        self._dead = np.zeros(len(self.ids), bool)
+        self._n_dead = 0
+        self.maint_stats["compactions"] += 1
+
+    # ------------------------------------------------------------- search --
 
     def _probe(self, q: np.ndarray) -> np.ndarray:
         d = ((self.centers - q[None]) ** 2).sum(-1)
         lists = np.argsort(d)[: self.nprobe]
         rows = [self.lists[int(li)] for li in lists]
         rows = [r for r in rows if len(r)]
-        return np.concatenate(rows) if rows else np.zeros((0,), np.int64)
+        probed = np.concatenate(rows) if rows else np.zeros((0,), np.int64)
+        if self._n_dead and len(probed):
+            probed = probed[~self._dead[probed]]
+        return probed
 
     def _ranked_rows(self, q: np.ndarray):
         """Probed rows of one query, ranked ascending by distance: (rows,
@@ -158,4 +340,4 @@ class IVFIndex:
         return out
 
     def distance(self, q: np.ndarray, id_) -> float:
-        return _exact_distance(self.emb, self.ids, q, id_)
+        return _live_distance(self.emb, self.ids, self._dead, q, id_)

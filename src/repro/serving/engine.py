@@ -112,6 +112,12 @@ class Request:
     # per-request speculative-decode economy (per-tenant acceptance rates)
     draft_tokens: int = 0
     accepted_tokens: int = 0
+    # live-corpus provenance (DESIGN.md §17): doc_ids whose text the prompt
+    # embeds, and the token offset where that content starts. A prefix-cache
+    # entry is tagged with content_docs only when its boundary reaches past
+    # content_start — template-only prefixes stay invalidation-immune.
+    content_docs: tuple = ()
+    content_start: Optional[int] = None
 
 
 class RunTruncated(RuntimeError):
@@ -431,7 +437,8 @@ class ServingEngine:
                     self.stats["prefill_tokens"] += boundary
                     self.prefix_cache.insert(
                         prompt[:boundary],
-                        prefix_snapshot(sub, self._extra + boundary))
+                        prefix_snapshot(sub, self._extra + boundary),
+                        doc_ids=self._entry_docs(req, boundary))
                     self.stats["prefix_inserts"] += 1
                     prefix_len = boundary
         if sub is None:
@@ -594,7 +601,19 @@ class ServingEngine:
             lpos += true_clen + extra
         return logits, state, lpos, first
 
-    def _snapshot_prefix_paged(self, slot: int, prefix: list, state: dict):
+    @staticmethod
+    def _entry_docs(req: Request, boundary: int) -> tuple:
+        """Doc provenance for a prefix entry at `boundary` tokens: the
+        request's content docs iff the boundary reaches into the content
+        span — a template-only prefix embeds no document text and must
+        survive that document's mutation."""
+        if (req.content_docs and req.content_start is not None
+                and boundary > req.content_start):
+            return tuple(req.content_docs)
+        return ()
+
+    def _snapshot_prefix_paged(self, slot: int, prefix: list, state: dict,
+                               req: Optional[Request] = None):
         """Store a prefix entry as *page references*: full pages shared by
         reference (ref-counted), the partially-filled boundary page copied
         once so the slot can keep writing into its own copy (CoW)."""
@@ -619,7 +638,9 @@ class ServingEngine:
         alloc, ids = self.alloc, entry_pages + ([tail] if tail is not None else [])
         self.prefix_cache.insert(prefix, snap, pages=entry_pages,
                                  tail_page=tail, nbytes=nbytes,
-                                 release=(lambda: alloc.release(ids)))
+                                 release=(lambda: alloc.release(ids)),
+                                 doc_ids=(self._entry_docs(req, len(prefix))
+                                          if req is not None else ()))
         self.stats["prefix_inserts"] += 1
 
     def _insert_paged_co(self, slot: int, req: Request):
@@ -675,7 +696,8 @@ class ServingEngine:
             if boundary >= self.prefix_min_len:
                 _, state, lpos, first = yield from self._chunked_prefill_co(
                     slot, state, prompt[:boundary], 0)
-                self._snapshot_prefix_paged(slot, prompt[:boundary], state)
+                self._snapshot_prefix_paged(slot, prompt[:boundary], state,
+                                            req=req)
                 logits, state, lpos, first = yield from self._chunked_prefill_co(
                     slot, state, prompt[boundary:], lpos, first=first)
             else:

@@ -55,6 +55,10 @@ class PrefixEntry:
     pages: tuple = ()
     tail_page: Optional[int] = None
     release: Optional[Callable[[], None]] = None
+    # Live-corpus provenance (DESIGN.md §17): doc_ids whose text is embedded
+    # in this prefix. A mutation to any of them invalidates the entry via
+    # `invalidate_docs`; template-only prefixes carry () and survive.
+    doc_ids: tuple = ()
 
     def _drop(self) -> None:
         if self.release is not None:
@@ -69,6 +73,7 @@ class PrefixCacheStats:
     inserts: int = 0
     evictions: int = 0
     saved_tokens: int = 0         # prefill tokens skipped via hits
+    invalidated_entries: int = 0  # dropped by live-corpus doc invalidation
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -113,7 +118,8 @@ class PrefixCache:
 
     def insert(self, prefix: list, snapshot: dict, *, pages=(),
                tail_page: Optional[int] = None, nbytes: Optional[int] = None,
-               release: Optional[Callable[[], None]] = None) -> PrefixEntry:
+               release: Optional[Callable[[], None]] = None,
+               doc_ids=()) -> PrefixEntry:
         key = tuple(prefix)
         if key in self._entries:                     # refresh, don't duplicate
             if release is not None:                  # drop the redundant copy
@@ -123,11 +129,26 @@ class PrefixCache:
         entry = PrefixEntry(
             tokens=key, cache=snapshot,
             nbytes=cache_nbytes(snapshot) if nbytes is None else int(nbytes),
-            pages=tuple(pages), tail_page=tail_page, release=release)
+            pages=tuple(pages), tail_page=tail_page, release=release,
+            doc_ids=tuple(doc_ids))
         self._entries[key] = entry
         self.stats.inserts += 1
         self._evict()
         return entry
+
+    def invalidate_docs(self, doc_ids) -> int:
+        """Drop every entry whose prefix embeds one of `doc_ids` (live-
+        corpus mutation, DESIGN.md §17). Page references release through
+        the entries' `release` callbacks exactly as on eviction, so paged
+        entries return their pages to the allocator. Returns entries
+        dropped."""
+        targets = set(doc_ids)
+        stale = [k for k, e in self._entries.items()
+                 if targets.intersection(e.doc_ids)]
+        for k in stale:
+            self._entries.pop(k)._drop()
+        self.stats.invalidated_entries += len(stale)
+        return len(stale)
 
     def _evict(self) -> None:
         while len(self._entries) > self.max_entries or (

@@ -1,0 +1,551 @@
+"""Live corpus subsystem (DESIGN.md §17): streaming ingestion, incremental
+indexing, and exact invalidation.
+
+Parity bar: an interleaved mutation/query stream must yield rows
+byte-identical to a rebuilt-from-scratch corpus + index at every mutation
+point — on the oracle extractor and on the real serving engine. Around
+that sit the mechanism tests: mutation-log replay digests, incremental
+ExactIndex/IVFIndex maintenance invariants, bounded re-embedding under
+localized edits, snapshot isolation for in-flight queries, prefix-cache
+doc invalidation, and the page-pool leak regression after delete.
+
+Property layer runs under hypothesis when available and falls back to
+fixed example streams otherwise (same pattern as test_index_components).
+"""
+import numpy as np
+import pytest
+
+try:                                   # hypothesis is optional in the seed
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # image; fall back to fixed examples
+    given = settings = st = None
+
+from repro.core import Filter, Query, Session, conj
+from repro.core.executor import TableSample
+from repro.data.corpus import Document, make_legal_corpus, make_wiki_corpus
+from repro.extract import OracleExtractor
+from repro.index.vector_index import ExactIndex, IVFIndex
+from repro.live import (LiveCorpus, LiveRetriever, LiveSession, MutationLog,
+                        edit_span_bytes, render_edit, sha_text)
+
+
+# ------------------------------------------------------------- fixtures ----
+
+
+def _fresh_subset(full, ids):
+    """`Corpus.subset` shares Document objects with its parent, and live
+    mutations land in place — copy the docs so module-scoped fixtures stay
+    pristine across tests."""
+    sub = full.subset(ids)
+    sub.docs = {d: Document(doc.doc_id, doc.domain, doc.text, dict(doc.truth),
+                            dict(doc.spans), doc.tokens, version=doc.version,
+                            sha=doc.sha)
+                for d, doc in sub.docs.items()}
+    return sub
+
+
+@pytest.fixture(scope="module")
+def wiki_full():
+    return make_wiki_corpus(seed=0)
+
+
+@pytest.fixture(scope="module")
+def wiki_ids(wiki_full):
+    players = [d for d in wiki_full.docs if wiki_full.docs[d].domain == "players"]
+    teams = [d for d in wiki_full.docs if wiki_full.docs[d].domain == "teams"]
+    return players[:20] + teams[:8]
+
+
+def _live_stack(wiki_full, wiki_ids, batch_size=8, **session_kw):
+    live = LiveCorpus(_fresh_subset(wiki_full, wiki_ids))
+    retr = LiveRetriever(live)
+    sess = LiveSession(live, retr, OracleExtractor(live),
+                       batch_size=batch_size, **session_kw)
+    return live, retr, sess
+
+
+def _players_query():
+    return Query(tables=["players"], select=[("players", "player_name")],
+                 where=conj(Filter("age", ">", 30, table="players"),
+                            Filter("all_stars", ">=", 3, table="players")))
+
+
+def _donor(wiki_full, live):
+    return next(d for d in wiki_full.docs
+                if d not in live.docs
+                and wiki_full.docs[d].domain == "players")
+
+
+def _rows_key(rows):
+    return sorted(rows, key=repr)      # rows are dicts (incl. nested _docs)
+
+
+def _oracle_rows(live, retr, query):
+    """Rows from a corpus + index rebuilt from scratch at the current
+    mutation point (fresh session, same seed, frozen idf clone)."""
+    snap = live.snapshot()
+    osess = Session(retr.rebuild_reference(snap), OracleExtractor(snap),
+                    batch_size=8)
+    return _rows_key(osess.execute(query).rows)
+
+
+# ------------------------------------------------------ log + manifest ----
+
+
+def test_mutation_log_replay_and_digests(wiki_full, wiki_ids):
+    live, _retr, sess = _live_stack(wiki_full, wiki_ids)
+    pid = wiki_ids[0]
+    sess.update(pid, render_edit(live, pid, "age", 41))
+    sess.delete(wiki_ids[1])
+    sess.ingest("players/new0", wiki_full.docs[_donor(wiki_full, live)].text,
+                "players")
+    assert live.seq == 3
+    # every doc carries (version, sha) matching the manifest
+    for doc_id, doc in live.docs.items():
+        assert live.log.manifest[doc_id] == (doc.version, doc.sha)
+        assert doc.sha == sha_text(doc.text)
+    # serialization round-trip preserves the stream digest (the manifest
+    # additionally carries seed-corpus entries a bare log can't know)
+    rt = MutationLog.from_jsonl(live.log.to_jsonl())
+    assert rt.digest() == live.log.digest()
+    # replay against a fresh seed snapshot reproduces the manifest exactly
+    fresh = LiveCorpus(_fresh_subset(wiki_full, wiki_ids))
+    live.log.replay(fresh)
+    assert fresh.log.digest() == live.log.digest()
+    assert fresh.log.manifest_digest() == live.log.manifest_digest()
+    assert {d: doc.text for d, doc in fresh.docs.items()} == \
+           {d: doc.text for d, doc in live.docs.items()}
+
+
+def test_edit_span_bytes_localized():
+    assert edit_span_bytes("abc def ghi", "abc xyz ghi") == 3
+    assert edit_span_bytes("same", "same") == 0
+    assert edit_span_bytes("abc", "abcdef") == 3
+    # pure deletion counts no new bytes
+    assert edit_span_bytes("abc def ghi", "abc ghi") == 0
+
+
+# ------------------------------------------- incremental index invariants --
+
+
+def _norm_rows(rng, n, d=16):
+    e = rng.normal(size=(n, d)).astype(np.float32)
+    return e / np.linalg.norm(e, axis=-1, keepdims=True)
+
+
+def _l2(a, b):
+    return float(np.sqrt(max(((a - b) ** 2).sum(), 0.0)))
+
+
+def _check_index_maintenance(make, seed, n0, ops):
+    """Interleaved add/remove on an incremental index vs the surviving-row
+    ground truth: same length, same live ids, search never returns a
+    tombstoned id, and the tombstone count respects the compaction bound
+    after every op."""
+    rng = np.random.default_rng(seed)
+    emb = _norm_rows(rng, n0)
+    ids = [f"d{i}" for i in range(n0)]
+    idx = make(emb.copy(), list(ids))
+    alive = dict(zip(ids, emb))
+    next_id = n0
+    for kind in ops:
+        if kind == "add" or len(alive) <= 2:
+            row = _norm_rows(rng, 1)[0]
+            nid = f"d{next_id}"
+            next_id += 1
+            idx.add(row[None], [nid])
+            alive[nid] = row
+        else:
+            victim = sorted(alive)[int(rng.integers(len(alive)))]
+            idx.remove([victim])
+            del alive[victim]
+        assert len(idx) == len(alive)
+        assert sorted(idx.live_ids()) == sorted(alive)
+        assert idx.n_tombstones <= idx.compact_ratio * len(idx.ids) + 1
+        q = _norm_rows(rng, 1)[0]
+        (got_ids, got_d), = idx.search(q, k=min(5, len(alive)))
+        assert all(g in alive for g in got_ids)
+        assert got_d == sorted(got_d)
+        # range search agrees with a brute-force scan of the live rows
+        r_ids, _ = idx.range_search(q, 1.0)
+        brute = {k for k, v in alive.items() if _l2(v, q) < 1.0}
+        if isinstance(idx, ExactIndex):
+            assert set(r_ids) == brute
+        else:                          # IVF: approximate, but never dead
+            assert set(r_ids) <= set(alive)
+        # distance() resolves the live occurrence even after re-adds
+        some = sorted(alive)[0]
+        assert abs(idx.distance(q, some) - _l2(alive[some], q)) < 1e-5
+
+
+_STREAMS = [(0, 12, ["add", "rm", "rm", "add", "rm", "add"]),
+            (1, 8, ["rm"] * 6 + ["add"] * 3),
+            (2, 20, ["add", "add", "rm", "rm", "rm", "rm", "rm", "add"])]
+
+
+@pytest.mark.parametrize("seed,n0,ops", _STREAMS)
+def test_exact_index_incremental_maintenance(seed, n0, ops):
+    _check_index_maintenance(ExactIndex, seed, n0, ops)
+
+
+@pytest.mark.parametrize("seed,n0,ops", _STREAMS)
+def test_ivf_index_incremental_maintenance(seed, n0, ops):
+    def make(emb, ids):
+        return IVFIndex(emb, ids, n_lists=4, nprobe=4, seed=0)
+    _check_index_maintenance(make, seed, n0, ops)
+
+
+def test_ivf_recluster_is_per_list_not_global():
+    """Churn concentrated in one region re-clusters a bounded number of
+    lists; untouched lists keep their centers (never a global k-means)."""
+    rng = np.random.default_rng(3)
+    emb = _norm_rows(rng, 64)
+    idx = IVFIndex(emb.copy(), list(range(64)), n_lists=8, nprobe=8, seed=0)
+    centers0 = idx.centers.copy()
+    # remove most members of one list to push its churn over the ratio
+    target = max(range(len(idx.lists)), key=lambda li: len(idx.lists[li]))
+    victims = [idx.ids[int(r)] for r in idx.lists[target]][:-1]
+    idx.remove(victims)
+    assert idx.maint_stats["reclustered_lists"] >= 1
+    untouched = [li for li in range(len(idx.lists))
+                 if li != target and not idx._churn[li]]
+    assert untouched
+    for li in untouched:
+        assert np.allclose(idx.centers[li], centers0[li])
+
+
+# --------------------------------------------------- incremental retriever --
+
+
+def _retriever_parity(live, retr):
+    """Doc-level candidates and per-doc segment hits of the live retriever
+    match a from-scratch rebuild under the frozen idf clone."""
+    ref = retr.rebuild_reference()
+    assert retr.candidate_docs("players", ["age"]) == \
+        ref.candidate_docs("players", ["age"])
+    for doc_id in list(live.docs)[:6]:
+        assert retr.segments(doc_id, "age", "players") == \
+            ref.segments(doc_id, "age", "players")
+
+
+def test_live_retriever_matches_rebuild_across_mutations(wiki_full, wiki_ids):
+    live = LiveCorpus(_fresh_subset(wiki_full, wiki_ids))
+    retr = LiveRetriever(live)
+    _retriever_parity(live, retr)
+    pid = wiki_ids[2]
+    live.update(pid, render_edit(live, pid, "age", 44))
+    _retriever_parity(live, retr)
+    live.delete(wiki_ids[3])
+    _retriever_parity(live, retr)
+    live.ingest("players/new1", wiki_full.docs[_donor(wiki_full, live)].text,
+                "players")
+    _retriever_parity(live, retr)
+    assert len(retr.doc_index) == len(live.docs)
+
+
+def test_reembedded_bytes_bounded_by_edit_locality():
+    """Acceptance metric: a localized edit on a long document re-embeds a
+    bounded slice of the corpus — far below the document, and orders of
+    magnitude below the full-rebuild embedding cost the static path pays."""
+    full = make_legal_corpus(seed=1)
+    ids = sorted(full.docs)[:6]
+    live = LiveCorpus(_fresh_subset(full, ids))
+    retr = LiveRetriever(live)
+    emb = retr.embedder
+    build_bytes = emb.reembedded_bytes          # full-rebuild contrast figure
+    doc_id = ids[0]
+    attr = next(iter(live.docs[doc_id].spans))
+    emb.reset_counters()
+    live.update(doc_id, render_edit(live, doc_id, attr, 424243))
+    edited = live.stats.edited_bytes
+    doc_bytes = len(live.docs[doc_id].text.encode("utf-8"))
+    assert 0 < edited < 64                       # the edit is localized
+    assert emb.reembedded_bytes < 0.5 * doc_bytes
+    assert emb.reembedded_bytes < 0.1 * build_bytes
+    assert emb.reused_bytes > emb.reembedded_bytes
+
+
+# ----------------------------------------------------- end-to-end parity ---
+
+
+def test_interleaved_stream_matches_rebuild_oracle(wiki_full, wiki_ids):
+    """THE parity bar: ingest/update/delete interleaved with queries gives
+    rows byte-identical to a rebuilt-from-scratch corpus/index at every
+    mutation point."""
+    live, retr, sess = _live_stack(wiki_full, wiki_ids)
+    q = _players_query()
+    assert _rows_key(sess.execute(q).rows) == _oracle_rows(live, retr, q)
+
+    pid = wiki_ids[0]
+    rec = sess.update(pid, render_edit(live, pid, "age", 99))
+    assert rec is not None and live.docs[pid].truth["age"] == 99
+    assert _rows_key(sess.execute(q).rows) == _oracle_rows(live, retr, q)
+
+    sess.delete(wiki_ids[1])
+    assert _rows_key(sess.execute(q).rows) == _oracle_rows(live, retr, q)
+
+    sess.ingest("players/new2", wiki_full.docs[_donor(wiki_full, live)].text,
+                "players")
+    assert _rows_key(sess.execute(q).rows) == _oracle_rows(live, retr, q)
+
+    cs = sess.cascade.stats
+    assert cs.mutations == 3
+    assert cs.samples_dropped >= 3               # exact policy: every table
+    assert sess.live_stats["mutations_applied"] == 3
+
+
+def test_cache_invalidation_is_exact(wiki_full, wiki_ids):
+    """Only the mutated doc's cache/escalation entries drop; every other
+    document's investment survives (their values are byte-identical to
+    fresh extraction, so retention is row-invisible)."""
+    live, _retr, sess = _live_stack(wiki_full, wiki_ids)
+    sess.execute(_players_query())
+    before = dict(sess.cache)
+    pid = next(k[0] for k in before
+               if live.docs.get(k[0]) is not None
+               and "age" in live.docs[k[0]].spans)
+    mine = [k for k in before if k[0] == pid]
+    others = {k: v for k, v in before.items() if k[0] != pid}
+    sess.update(pid, render_edit(live, pid, "age", 55))
+    assert all(k not in sess.cache for k in mine)
+    assert all(sess.cache.get(k) == v for k, v in others.items())
+    assert sess.cascade.stats.cache_entries_dropped == len(mine)
+
+
+def test_sample_version_stamping_and_exact_drop(wiki_full, wiki_ids):
+    live, _retr, sess = _live_stack(wiki_full, wiki_ids)
+    q = _players_query()
+    sess.execute(q)
+    sample = sess._samples["players"]
+    assert isinstance(sample, TableSample) and sample.version == live.seq
+    pid = wiki_ids[4]
+    sess.update(pid, render_edit(live, pid, "age", 48))
+    assert "players" not in sess._samples        # exact policy drops it
+    sess.execute(q)
+    assert sess._samples["players"].version == live.seq
+
+
+def test_sampled_only_policy_retains_unaffected_samples(wiki_full, wiki_ids):
+    live, _retr, sess = _live_stack(wiki_full, wiki_ids,
+                                    sample_policy="sampled_only")
+    sess.execute(_players_query())
+    sample = sess._samples["players"]
+    in_sample = set(sample.sampled)
+    unsampled = next(d for d in live.docs if d not in in_sample)
+    sess.update(unsampled, live.docs[unsampled].text + " (edited)")
+    assert sess._samples.get("players") is sample    # retained
+    assert sess.cascade.stats.samples_retained >= 1
+    hit = sample.sampled[0]
+    sess.update(hit, live.docs[hit].text + " (edited)")
+    assert "players" not in sess._samples            # directly stale: drops
+
+
+# ------------------------------------------------------ snapshot isolation --
+
+
+def test_mutation_defers_behind_row_emitting_query(wiki_full, wiki_ids):
+    """A query that has emitted rows finishes on the pre-mutation snapshot;
+    the mutation applies once it drains — rows are never torn."""
+    live, _retr, sess = _live_stack(wiki_full, wiki_ids, batch_size=2)
+    h = sess.submit(_players_query())
+    while not h._rows and h in sess._active:
+        sess._step()
+    assert h._rows and h in sess._active, "rows stream mid-flight"
+    pid = wiki_ids[0]
+    pre_rows = list(h._rows)
+    rec = sess.update(pid, render_edit(live, pid, "age", 99))
+    assert rec is None and live.seq == 0             # deferred, not applied
+    assert sess.live_stats["mutations_deferred"] >= 1
+    res = h.result()
+    assert res.rows[:len(pre_rows)] == pre_rows      # emitted rows stand
+    sess._apply_pending()
+    assert live.seq == 1 and live.docs[pid].truth["age"] == 99
+    assert sess.live_stats["mutations_applied"] == 1
+
+
+def test_mutation_restarts_rowless_inflight_query(wiki_full, wiki_ids):
+    """An in-flight query with no emitted rows restarts and runs entirely
+    on the post-mutation snapshot — identical to submitting it after the
+    mutation."""
+    live, retr, sess = _live_stack(wiki_full, wiki_ids)
+    q = _players_query()
+    h = sess.submit(q)
+    sess._step()                                     # in flight, no rows yet
+    assert not h._rows and h in sess._active
+    pid = wiki_ids[0]
+    rec = sess.update(pid, render_edit(live, pid, "age", 99))
+    assert rec is not None and sess.live_stats["query_restarts"] >= 1
+    assert _rows_key(h.result().rows) == _oracle_rows(live, retr, q)
+
+
+# -------------------------------------------------------- property stream --
+
+
+def _run_stream(seed, ops):
+    """Random interleaved mutation stream vs rebuild oracle: index sizes,
+    tombstone bounds, retrieval parity, cache exactness, and replay
+    digests at every step."""
+    full = make_wiki_corpus(seed=0)
+    players = [d for d in full.docs if full.docs[d].domain == "players"]
+    ids = players[:10]
+    live = LiveCorpus(_fresh_subset(full, ids))
+    retr = LiveRetriever(live)
+    rng = np.random.default_rng(seed)
+    donors = iter(players[10:10 + len(ops)])
+    cache = {(d, "age"): live.docs[d].truth.get("age") for d in ids}
+    n_new = 0
+    for kind in ops:
+        pool = sorted(live.docs)
+        if kind == "update":
+            doc = pool[int(rng.integers(len(pool)))]
+            try:
+                text = render_edit(live, doc, "age",
+                                   int(rng.integers(18, 45)))
+            except (KeyError, ValueError):
+                continue               # doc lost its age span: skip
+            live.update(doc, text)
+            cache.pop((doc, "age"), None)
+        elif kind == "delete" and len(pool) > 2:
+            doc = pool[int(rng.integers(len(pool)))]
+            live.delete(doc)
+            cache.pop((doc, "age"), None)
+        else:
+            donor = next(donors, None)
+            if donor is None:
+                continue
+            n_new += 1
+            live.ingest(f"players/p{n_new}", full.docs[donor].text,
+                        "players")
+        # index invariants at every step
+        di = retr.doc_index
+        assert len(di) == len(live.docs)
+        assert sorted(di.live_ids()) == sorted(live.docs)
+        assert di.n_tombstones <= di.compact_ratio * len(di.ids) + 1
+        # unchanged cache entries still match ground truth exactly
+        for (d, a), v in cache.items():
+            assert live.docs[d].truth.get(a) == v
+    # final retrieval parity vs rebuilt-from-scratch
+    ref = retr.rebuild_reference()
+    assert retr.candidate_docs("players", ["age"]) == \
+        ref.candidate_docs("players", ["age"])
+    for doc_id in sorted(live.docs)[:4]:
+        assert retr.segments(doc_id, "age", "players") == \
+            ref.segments(doc_id, "age", "players")
+    # replay digest: the recorded stream reproduces the manifest
+    fresh = LiveCorpus(_fresh_subset(full, ids))
+    live.log.replay(fresh)
+    assert fresh.log.manifest_digest() == live.log.manifest_digest()
+
+
+if st is not None:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**6),
+           st.lists(st.sampled_from(["ingest", "update", "delete"]),
+                    min_size=1, max_size=5))
+    def test_random_streams_match_rebuild(seed, ops):
+        _run_stream(seed, ops)
+else:
+    @pytest.mark.parametrize("seed,ops", [
+        (0, ["update", "delete", "ingest"]),
+        (1, ["delete", "delete", "update", "ingest", "update"]),
+        (2, ["ingest", "update", "update", "delete"])])
+    def test_random_streams_match_rebuild(seed, ops):
+        _run_stream(seed, ops)
+
+
+# ------------------------------------------------------------ served path --
+
+
+def _served_stack(live, *, paged=False, max_len=1024, **ext_kw):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.data import lm_data
+    from repro.extract.served import ServedExtractor
+    from repro.models import init_params
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=2, max_len=max_len, prefix_cache=True)
+    if paged:
+        kw.update(kv_layout="paged", page_size=16)
+    eng = ServingEngine(cfg, params, **kw)
+    ext = ServedExtractor(live, eng, max_new=4, **ext_kw)
+    return (cfg, params, kw), eng, ext
+
+
+def _mini_swde(n=6):
+    from repro.data.corpus import make_swde_corpus
+    full = make_swde_corpus()
+    ids = [d for d in sorted(full.docs) if "universities" in d][:n]
+    return full, ids
+
+
+def test_served_interleaved_parity_and_prefix_invalidation():
+    """Served leg of the parity bar: one update between queries on the
+    real engine still byte-matches the rebuilt oracle."""
+    from repro.extract.served import ServedExtractor
+    from repro.serving.engine import ServingEngine
+
+    full, ids = _mini_swde()
+    live = LiveCorpus(_fresh_subset(full, ids))
+    retr = LiveRetriever(live)
+    (cfg, params, kw), eng, ext = _served_stack(live)
+    sess = LiveSession(live, retr, ext, batch_size=2)
+    assert eng.prefix_cache in sess.cascade.prefix_caches
+    q = Query(tables=["universities"],
+              select=[("universities", "university_name")],
+              where=Filter("tuition", "<", 30000, table="universities"))
+
+    def oracle():
+        snap = live.snapshot()
+        oeng = ServingEngine(cfg, params, **kw)
+        osess = Session(retr.rebuild_reference(snap),
+                        ServedExtractor(snap, oeng, max_new=4), batch_size=2)
+        return _rows_key(osess.execute(q).rows)
+
+    assert _rows_key(sess.execute(q).rows) == oracle()
+    doc = ids[0]
+    sess.update(doc, render_edit(live, doc, "tuition", 12000))
+    assert _rows_key(sess.execute(q).rows) == oracle()
+
+
+def test_delete_releases_cached_prefix_pages():
+    """Leak regression: after delete() of a doc whose doc-first escalation
+    prefix was cached in the paged pool, the allocator's free-page count
+    returns to its pre-insert baseline."""
+    full, ids = _mini_swde()
+    live = LiveCorpus(_fresh_subset(full, ids))
+    retr = LiveRetriever(live)
+    _c, eng, ext = _served_stack(live, paged=True, max_len=512,
+                                 doc_prefix_escalation=True)
+    sess = LiveSession(live, retr, ext, batch_size=2)
+    free0 = eng.pool_free_pages()
+    doc = ids[0]
+    text = live.docs[doc].text[:200]
+    ext.escalate_batch([(doc, "tuition", [text]),
+                        (doc, "university_name", [text])])
+    pc = eng.prefix_cache
+    assert any(doc in e.doc_ids for e in pc._entries.values())
+    assert eng.pool_free_pages() < free0          # entry holds page refs
+    assert pc.stats.hits >= 1                     # attrs shared the doc prefix
+    sess.delete(doc)
+    assert pc.stats.invalidated_entries >= 1
+    assert eng.pool_free_pages() == free0         # every page returned
+
+
+def test_template_prefixes_survive_mutation():
+    """extract_batch prefixes are template-only (content rides in the
+    tail): a doc mutation must NOT invalidate them."""
+    full, ids = _mini_swde()
+    live = LiveCorpus(_fresh_subset(full, ids))
+    retr = LiveRetriever(live)
+    _c, eng, ext = _served_stack(live)
+    sess = LiveSession(live, retr, ext, batch_size=2)
+    doc = ids[0]
+    ext.extract_batch([(doc, "tuition", [live.docs[doc].text[:120]])])
+    n0 = len(eng.prefix_cache)
+    assert n0 >= 1
+    sess.update(doc, render_edit(live, doc, "tuition", 21000))
+    assert len(eng.prefix_cache) == n0
+    assert eng.prefix_cache.stats.invalidated_entries == 0

@@ -346,7 +346,7 @@ class _StubRetriever:
     def segment_tokens(self, doc_id, attr, table=None):
         return 5
 
-    def add_evidence(self, table, attr, segments):
+    def add_evidence(self, table, attr, segments, doc_id=None):
         pass
 
     def finalize_thresholds(self, table, attrs, stats):
