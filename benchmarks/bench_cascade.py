@@ -1,0 +1,234 @@
+"""Difficulty-aware model cascade vs. target-only extraction
+(DESIGN.md §18).
+
+Workload: one analytics query over the synthetic SWDE university corpus,
+executed through full served Sessions (sampling sweep + quest-ordered
+query phase) four ways:
+
+  target      — plain ServedExtractor on the target engine (baseline);
+  cascade     — CascadeExtractor: a small zoo model serves the easy
+                per-(doc, attr) extractions (difficulty = sampling
+                agreement + retrieval margins + context length), the
+                verifier escalates structurally invalid parses;
+  verify_all  — degenerate-routing parity check: everything routes to the
+                small tier and the verifier escalates *everything*, so
+                rows must be byte-identical to target-only while the
+                small tier's spend is pure waste;
+  off         — cascade disabled: must be byte-identical to target-only
+                (the small engine is never touched).
+
+Paired gated counters (the §18 contract):
+  quality — F1 vs. exact ground truth must be within 1 point of
+            target-only (in this container both parse through the §8.1
+            oracle fallback, so they are equal by construction — the gate
+            guards the plumbing);
+  cost    — target-model decode tokens must drop >= 25% vs. target-only
+            at that F1; `target_tokens_saved` (ledger) reports the
+            prompt+decode tokens that never reached the target model.
+
+Ledger token columns stay cascade-invariant (routing changes which model
+produced a value, never which value) — asserted like every other serving
+optimization's bench. Walls are reported but not gated (tiny smoke
+models; spec_decode precedent).
+
+Emits `benchmarks/out/BENCH_cascade.json` (compared against the committed
+baseline by `benchmarks/compare.py` in CI) plus a per-path CSV.
+`--smoke` runs the reduced CI-sized workload.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import DifficultyEstimator, Filter, Query, Session, conj
+from repro.data import lm_data
+from repro.data.corpus import Corpus, make_swde_corpus
+from repro.extract import CascadeExtractor, ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+
+try:
+    from .common import prf, result_row_set, truth_row_set
+except ImportError:  # run as a script (the CI smoke leg)
+    from common import prf, result_row_set, truth_row_set
+
+OUT = Path(__file__).parent / "out"
+MAX_NEW = 6
+
+
+def _corpus(small: bool) -> Corpus:
+    full = make_swde_corpus()
+    n_uni, n_lap = (40, 10) if small else (120, 30)
+    uni = [d for d in sorted(full.docs) if "universities" in d][:n_uni]
+    lap = [d for d in sorted(full.docs) if "laptops" in d][:n_lap]
+    return full.subset(uni + lap)
+
+
+def _query() -> Query:
+    return Query(tables=["universities"],
+                 select=[("universities", "university_name")],
+                 where=conj(Filter("tuition", "<", 42000,
+                                   table="universities"),
+                            Filter("enrollment", ">", 15000,
+                                   table="universities")))
+
+
+def _small_cfg(cfg):
+    """The cheap tier: a genuinely smaller zoo config (same family, ~1/20
+    the parameters of the target smoke config)."""
+    return cfg.replace(num_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                       head_dim=16, d_ff=48)
+
+
+def _run_path(corpus, query, *, mode: str, batch: int, cfg, params,
+              small_cfg, small_params):
+    engine = ServingEngine(cfg, params, slots=batch, max_len=1024,
+                           prefix_cache=True)
+    retriever = TwoLevelRetriever(corpus)
+    if mode == "target":
+        extractor = ServedExtractor(corpus, engine, max_new=MAX_NEW)
+    else:
+        small = ServingEngine(small_cfg, small_params, slots=batch,
+                              max_len=1024, prefix_cache=True)
+        extractor = CascadeExtractor(
+            corpus, engine, small, cascade=mode,
+            difficulty=DifficultyEstimator(retriever), max_new=MAX_NEW)
+    session = Session(retriever, extractor, batch_size=batch)
+    t0 = time.time()
+    result = session.execute(query)
+    wall = time.time() - t0
+    s = extractor.stats
+    return {
+        "rows": sorted(tuple(sorted(r["_docs"].items()))
+                       for r in result.rows),
+        "result": result,
+        "wall_s": wall,
+        "target_decode_tokens": s.generated_tokens,
+        "target_prompt_tokens": s.prompt_tokens,
+        "small_decode_tokens": getattr(s, "small_generated_tokens", 0),
+        "small_prompt_tokens": getattr(s, "small_prompt_tokens", 0),
+        "routed_small": getattr(s, "routed_small", 0),
+        "routed_target": getattr(s, "routed_target", 0),
+        "escalations": getattr(s, "escalations", 0),
+        "accepted_small": getattr(s, "accepted_small", 0),
+        "engine_decode_steps": engine.stats["decode_steps"],
+        "ledger": session.ledger.snapshot(),
+    }
+
+
+def run(quick: bool = False, smoke: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = quick or smoke
+    corpus = _corpus(small)
+    query = _query()
+    batch = 4 if small else 8
+
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    scfg = _small_cfg(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sparams = init_params(scfg, jax.random.PRNGKey(1))
+    kw = dict(batch=batch, cfg=cfg, params=params,
+              small_cfg=scfg, small_params=sparams)
+
+    tgt = _run_path(corpus, query, mode="target", **kw)
+    casc = _run_path(corpus, query, mode="on", **kw)
+    dgen = _run_path(corpus, query, mode="verify_all", **kw)
+    off = _run_path(corpus, query, mode="off", **kw)
+
+    truth = truth_row_set(corpus, query)
+    f1_tgt = prf(result_row_set(query, tgt["result"]), truth)[2]
+    f1_casc = prf(result_row_set(query, casc["result"]), truth)[2]
+
+    reduction = 1 - casc["target_decode_tokens"] / \
+        max(tgt["target_decode_tokens"], 1)
+    routed = casc["routed_small"] + casc["routed_target"]
+    routed_small_frac = casc["routed_small"] / max(routed, 1)
+    escalation_rate = casc["escalations"] / max(casc["routed_small"], 1)
+    ledger_identical = all(
+        p["ledger"][c] == tgt["ledger"][c]
+        for p in (casc, dgen, off)
+        for c in ("input_tokens", "output_tokens", "total_tokens",
+                  "per_phase"))
+
+    result = {
+        "bench": "cascade",
+        "smoke": bool(small),
+        "docs": len(corpus.docs),
+        "batch": batch,
+        "max_new": MAX_NEW,
+        # paired gated counters: quality floor + cost win
+        "f1_target_only": round(f1_tgt, 4),
+        "f1_cascade": round(f1_casc, 4),
+        "f1_within_floor": f1_casc >= f1_tgt - 0.01,
+        "target_decode_tokens_target_only": tgt["target_decode_tokens"],
+        "target_decode_tokens_cascade": casc["target_decode_tokens"],
+        "target_decode_token_reduction": round(reduction, 4),
+        "tokens_saved_floor_met": reduction >= 0.25,
+        # parity invariants
+        "degenerate_rows_identical": dgen["rows"] == tgt["rows"],
+        "cascade_off_rows_identical": off["rows"] == tgt["rows"],
+        "cascade_rows_identical": casc["rows"] == tgt["rows"],
+        "ledger_token_columns_identical": ledger_identical,
+        # cascade economy
+        "routed_small": casc["routed_small"],
+        "routed_target": casc["routed_target"],
+        "routed_small_fraction": round(routed_small_frac, 4),
+        "escalations": casc["escalations"],
+        "escalation_rate": round(escalation_rate, 4),
+        "small_decode_tokens": casc["small_decode_tokens"],
+        "small_prompt_tokens": casc["small_prompt_tokens"],
+        "ledger_cascade_small": casc["ledger"]["cascade_small"],
+        "ledger_target_tokens_saved": casc["ledger"]["target_tokens_saved"],
+        "wall_target_s": round(tgt["wall_s"], 3),
+        "wall_cascade_s": round(casc["wall_s"], 3),
+        "wall_verify_all_s": round(dgen["wall_s"], 3),
+    }
+    with open(OUT / "BENCH_cascade.json", "w") as f:
+        json.dump(result, f, indent=2)
+    with open(OUT / "cascade.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["path", "target_decode_tokens", "small_decode_tokens",
+                    "routed_small", "escalations", "f1", "wall_s"])
+        for name, r, f1 in (("target", tgt, f1_tgt), ("cascade", casc, f1_casc),
+                            ("verify_all", dgen, ""), ("off", off, "")):
+            w.writerow([name, r["target_decode_tokens"],
+                        r["small_decode_tokens"], r["routed_small"],
+                        r["escalations"], f1, f"{r['wall_s']:.3f}"])
+
+    print(f"cascade: {len(corpus.docs)} docs @ batch {batch} | "
+          f"F1 target-only {f1_tgt:.3f} vs cascade {f1_casc:.3f} | "
+          f"target decode tokens {tgt['target_decode_tokens']} -> "
+          f"{casc['target_decode_tokens']} ({reduction:.1%} saved) | "
+          f"routing small {casc['routed_small']}/{routed} "
+          f"(escalated {casc['escalations']}) | wall "
+          f"{tgt['wall_s']:.2f}s / {casc['wall_s']:.2f}s")
+
+    assert result["degenerate_rows_identical"], \
+        "verify_all (escalate-everything) rows diverged from target-only"
+    assert result["cascade_off_rows_identical"], \
+        "cascade=off must be byte-identical to a plain ServedExtractor"
+    assert ledger_identical, "cascade leaked into ledger token columns"
+    assert result["f1_within_floor"], (
+        f"cascade F1 {f1_casc:.4f} fell more than 1 point below "
+        f"target-only {f1_tgt:.4f}")
+    assert reduction >= 0.25, (
+        f"target decode-token reduction {reduction:.1%} below the 25% bar")
+    assert casc["ledger"]["target_tokens_saved"] > 0, \
+        "cascade accepted nothing — ledger shows no target tokens saved"
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

@@ -111,6 +111,21 @@ SPECS = {
                "reclustered_lists", "prefix_entries_invalidated"],
         higher=["cache_entries_retained_fraction", "reused_bytes_per_edit"],
     ),
+    # the cascade contract is the paired gate from DESIGN.md §18: the
+    # quality floor (F1 within a point of target-only) and the cost win
+    # (target-model decode tokens down >= 25%) must hold together, plus
+    # the three parity invariants (verify_all/off rows byte-identical,
+    # ledger token columns cascade-invariant). Walls are reported but not
+    # gated — tiny smoke models, spec_decode precedent.
+    "cascade": spec(
+        invariants=["f1_within_floor", "tokens_saved_floor_met",
+                    "degenerate_rows_identical", "cascade_off_rows_identical",
+                    "cascade_rows_identical",
+                    "ledger_token_columns_identical"],
+        lower=["target_decode_tokens_cascade", "escalations"],
+        higher=["target_decode_token_reduction", "routed_small_fraction",
+                "f1_cascade", "ledger_target_tokens_saved"],
+    ),
 }
 
 

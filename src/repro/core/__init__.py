@@ -1,4 +1,5 @@
 from .expr import (And, Filter, JoinEdge, Or, Query, QueryError, conj, disj)
+from .difficulty import DifficultyEstimator, DifficultyStats
 from .executor import Engine, QueryResult, QueryRun, TableSample
 from .ledger import CostLedger
 from .ordering import exhaustive_plan, plan_expression, plan_fixed_order
@@ -13,5 +14,6 @@ __all__ = ["Filter", "And", "Or", "Query", "JoinEdge", "QueryError",
            "Session", "PreparedQuery", "QueryHandle", "render_explain",
            "QueryCancelled", "QueryTimeout",
            "CostLedger", "SampleStats",
+           "DifficultyEstimator", "DifficultyStats",
            "BatchScheduler", "SchedulerStats",
            "plan_expression", "plan_fixed_order", "exhaustive_plan"]

@@ -82,6 +82,10 @@ class TableSample:
     # corpus mutation-log seq at publish time (live corpora only): a sample
     # stamped below the current seq is stale evidence for exact invalidation
     version: int = 0
+    # per-attr difficulty summary (DESIGN.md §18), folded at publish time
+    # when the session's extractor routes through a DifficultyEstimator:
+    # attr -> {presence, mean_cost, n, predicted_small}
+    difficulty: dict = field(default_factory=dict)
 
 
 @dataclass

@@ -51,6 +51,14 @@ class CostLedger:
     draft_tokens: int = 0
     accepted_tokens: int = 0
     decode_steps_saved: int = 0
+    # model-cascade accounting (DESIGN.md §18): routing an extraction to
+    # the small tier changes which *model* produced the value, never which
+    # value — token columns stay cascade-invariant and the per-tier economy
+    # is reported apart (small-tier extractions kept, verifier escalations,
+    # target-model tokens that never had to be spent)
+    cascade_small: int = 0
+    cascade_escalations: int = 0
+    target_tokens_saved: int = 0
     # parent session ledger (child() creates the link); charges forward up
     parent: Optional["CostLedger"] = None
     # admission-control identity: set on per-tenant ledgers (and inherited
@@ -88,6 +96,11 @@ class CostLedger:
         self.accepted_tokens += accepted
         self.decode_steps_saved += steps_saved
 
+    def record_cascade(self, small: int, escalations: int, saved_tokens: int):
+        self.cascade_small += small
+        self.cascade_escalations += escalations
+        self.target_tokens_saved += saved_tokens
+
     @property
     def total_tokens(self) -> int:
         return self.input_tokens + self.output_tokens
@@ -108,6 +121,9 @@ class CostLedger:
             "draft_tokens": self.draft_tokens,
             "accepted_tokens": self.accepted_tokens,
             "decode_steps_saved": self.decode_steps_saved,
+            "cascade_small": self.cascade_small,
+            "cascade_escalations": self.cascade_escalations,
+            "target_tokens_saved": self.target_tokens_saved,
         }
 
     def merged(self, other: "CostLedger") -> "CostLedger":
@@ -126,6 +142,11 @@ class CostLedger:
         out.accepted_tokens = self.accepted_tokens + other.accepted_tokens
         out.decode_steps_saved = (self.decode_steps_saved +
                                   other.decode_steps_saved)
+        out.cascade_small = self.cascade_small + other.cascade_small
+        out.cascade_escalations = (self.cascade_escalations +
+                                   other.cascade_escalations)
+        out.target_tokens_saved = (self.target_tokens_saved +
+                                   other.target_tokens_saved)
         for d in (self.per_phase, other.per_phase):
             for k, v in d.items():
                 out.per_phase[k] = out.per_phase.get(k, 0) + v

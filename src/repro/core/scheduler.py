@@ -252,6 +252,7 @@ class BatchScheduler:
             return
         hits0, saved0 = self._prefix_stats()
         spec0 = self._spec_stats()
+        casc0 = self._cascade_stats()
         if owners is not None and getattr(self.extractor, "accepts_owners",
                                           False):
             # opt-in protocol extension: the serving path maps each item's
@@ -264,12 +265,14 @@ class BatchScheduler:
             out = self.extractor.extract_batch(items)
         hits1, saved1 = self._prefix_stats()
         spec1 = self._spec_stats()
+        casc1 = self._cascade_stats()
         self.stats.rounds += 1
         self.stats.submitted += len(items)
         self.stats.max_batch = max(self.stats.max_batch, len(items))
         self.ledger.record_batch(len(items))
         self.ledger.record_prefix(hits1 - hits0, saved1 - saved0)
         self.ledger.record_spec(*(b - a for a, b in zip(spec0, spec1)))
+        self.ledger.record_cascade(*(b - a for a, b in zip(casc0, casc1)))
         if owners:
             self.record_owner_batches(owners.get(k) for k in slots)
         for (doc_id, attr), (value, inp_tokens) in zip(slots, out):
@@ -312,6 +315,7 @@ class BatchScheduler:
             chunk = items[i:i + self.batch_size]
             hits0, saved0 = self._prefix_stats()
             spec0 = self._spec_stats()
+            casc0 = self._cascade_stats()
             if owners is not None and getattr(self.extractor,
                                               "accepts_owners", False):
                 res = self.extractor.extract_full_doc_batch(
@@ -320,9 +324,12 @@ class BatchScheduler:
                 res = self.extractor.extract_full_doc_batch(chunk)
             hits1, saved1 = self._prefix_stats()
             spec1 = self._spec_stats()
+            casc1 = self._cascade_stats()
             self.ledger.record_batch(len(chunk))
             self.ledger.record_prefix(hits1 - hits0, saved1 - saved0)
             self.ledger.record_spec(*(b - a for a, b in zip(spec0, spec1)))
+            self.ledger.record_cascade(*(b - a
+                                         for a, b in zip(casc0, casc1)))
             if owners:
                 self.record_owner_batches(owners[i:i + self.batch_size])
             out.extend(res)
@@ -343,3 +350,13 @@ class BatchScheduler:
         return (getattr(st, "draft_tokens", 0),
                 getattr(st, "accepted_tokens", 0),
                 getattr(st, "decode_steps_saved", 0))
+
+    def _cascade_stats(self):
+        """(accepted_small, escalations, target_tokens_saved) from the
+        extractor, when it is a model cascade (DESIGN.md §18; 0
+        otherwise) — per-round deltas route to `ledger.record_cascade`
+        like the prefix/spec counters above."""
+        st = getattr(self.extractor, "stats", None)
+        return (getattr(st, "accepted_small", 0),
+                getattr(st, "escalations", 0),
+                getattr(st, "target_tokens_saved", 0))

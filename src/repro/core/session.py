@@ -319,8 +319,10 @@ def render_explain(plan: dict) -> str:
         lines.append(f"  TABLE {t['table']}: {t['candidate_docs']} candidate "
                      f"docs | {samp}")
         for st in t.get("stages", []):
+            split = st.get("predicted_tier_split")
+            tier = (f", cascade small {split['small']:.0%}" if split else "")
             lines.append(f"    - {st['filter']}  [sel={st['selectivity']}, "
-                         f"~{st['mean_cost_tokens']} tok/doc]")
+                         f"~{st['mean_cost_tokens']} tok/doc{tier}]")
         if "est_cost_tokens_per_doc" in t:
             lines.append(f"    => est {t['est_cost_tokens_per_doc']} tok/doc x "
                          f"{t['candidate_docs']} docs = "
@@ -461,11 +463,20 @@ class Session:
                 entry["est_cost_tokens_per_doc"] = round(plan.cost, 2)
                 entry["est_total_cost_tokens"] = round(plan.cost * cands)
                 entry["est_pass_rate"] = round(plan.prob, 4)
-                entry["stages"] = [
-                    {"filter": str(f), "attr": f.attr,
-                     "selectivity": round(stats.selectivity(f), 4),
-                     "mean_cost_tokens": round(stats.mean_cost(f.attr), 2)}
-                    for f in plan.ordered_filters()]
+                est = getattr(self.extractor, "difficulty", None)
+                entry["stages"] = []
+                for f in plan.ordered_filters():
+                    stage = {"filter": str(f), "attr": f.attr,
+                             "selectivity": round(stats.selectivity(f), 4),
+                             "mean_cost_tokens":
+                                 round(stats.mean_cost(f.attr), 2)}
+                    if est is not None:
+                        # predicted cascade tier mix for this stage, from
+                        # the sampled docs' difficulty scores (§18); None
+                        # until the table's sampling phase has folded
+                        stage["predicted_tier_split"] = \
+                            est.predicted_split(t, f.attr)
+                    entry["stages"].append(stage)
             out["tables"].append(entry)
         return out
 
@@ -690,16 +701,28 @@ class Session:
 
     def drop_doc_state(self, doc_id) -> dict:
         """Exact per-document invalidation (DESIGN.md §17): remove every
-        cached attr value and escalation memo keyed to `doc_id`. Called by
-        the live cascade when the document mutates — a stale value must
+        cached attr value and escalation memo keyed to `doc_id` — plus,
+        under a cascade extractor (§18), its memoized difficulty estimates
+        and tier-escalation memo entries (post-mutation content deserves a
+        fresh routing decision and a fresh shot at the small tier). Called
+        by the live cascade when the document mutates — a stale value must
         never satisfy a post-mutation query. Returns drop counts."""
         cache_keys = [k for k in self.cache if k[0] == doc_id]
         for k in cache_keys:
             del self.cache[k]
         esc_keys = [k for k in self._escalated if k[0] == doc_id]
         self._escalated.difference_update(esc_keys)
+        est = getattr(self.extractor, "difficulty", None)
+        n_difficulty = est.drop_doc(doc_id) if est is not None else 0
+        tier_memo = getattr(self.extractor, "tier_memo", None)
+        tier_keys = ([k for k in tier_memo if k[0] == doc_id]
+                     if tier_memo is not None else [])
+        if tier_keys:
+            tier_memo.difference_update(tier_keys)
         return {"cache_entries": len(cache_keys),
-                "escalations": len(esc_keys)}
+                "escalations": len(esc_keys),
+                "difficulty_estimates": n_difficulty,
+                "tier_memo": len(tier_keys)}
 
     def invalidate_table_sample(self, table: str) -> bool:
         """Drop `table`'s sampling investment: the published sample is
@@ -746,6 +769,15 @@ class Session:
         return ("own", self._samples[table].prior)
 
     def _publish_sample(self, h: QueryHandle, sample: TableSample) -> None:
+        # model cascade (DESIGN.md §18): fold the paid sampling sweep into
+        # the difficulty estimator at the moment the sample becomes shared
+        # state — the summary rides on the TableSample so explain() and
+        # later covered queries see the predicted tier mix without refolding
+        est = getattr(self.extractor, "difficulty", None)
+        if est is not None:
+            sample.difficulty = est.fold_sample(
+                sample.table, sample.attrs, sample.stats,
+                sampled=sample.sampled)
         self._samples[sample.table] = sample
         h.reservations.discard(sample.table)
 

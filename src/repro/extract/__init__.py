@@ -1,3 +1,6 @@
+from .cascade import CascadeExtractor, CascadeServedStats
 from .oracle import OracleExtractor
+from .served import ServedExtractor, ServedStats
 
-__all__ = ["OracleExtractor"]
+__all__ = ["OracleExtractor", "ServedExtractor", "ServedStats",
+           "CascadeExtractor", "CascadeServedStats"]

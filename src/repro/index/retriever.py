@@ -82,6 +82,7 @@ class TwoLevelRetriever:
         self._doc_center: dict = {}         # table -> evidence-centered query emb
         self._query_emb_cache: dict = {}
         self._seg_cache: dict = {}          # (doc, attr, version) -> [Segment]
+        self._margin_cache: dict = {}       # (doc, attr, table, version) -> margin
         # beyond-paper: re-center the document-level query on the summaries
         # of known-relevant sampled docs (evidence augmentation applied to
         # the doc level, symmetric to the paper's segment-level evidence).
@@ -100,6 +101,7 @@ class TwoLevelRetriever:
         new._tau = {}
         new._doc_center = {}
         new._seg_cache = {}
+        new._margin_cache = {}
         new._version = 0
         return new
 
@@ -383,3 +385,39 @@ class TwoLevelRetriever:
         if key not in self._seg_cache:
             self._seg_cache[key] = self._segments_for(doc_id, attr, table)
         return sum(s.tokens for s in self._seg_cache[key])
+
+    def score_margin(self, doc_id, attr: str,
+                     table: str | None = None):
+        """Normalized retrieval confidence in [0, 1] for (doc, attr) —
+        the difficulty-estimation signal of DESIGN.md §18: how far inside
+        the attribute's probe radii the document's best segment sits
+        (1 = dead-center on a known phrasing template, 0 = scraping the
+        radius or outside every probe). `rag_topk` has no radii, so its
+        margin is measured against `gamma_init`; `fulldoc` retrieval has
+        no segment ranking at all and returns None (neutral). Cached per
+        index version, so live mutations invalidate exactly like the
+        segment cache."""
+        doc = self.corpus.docs.get(doc_id)
+        if doc is None or doc_id not in self.seg_index:
+            return None
+        table = table or doc.table
+        key = (doc_id, attr, table, self._version)
+        if key in self._margin_cache:
+            return self._margin_cache[key]
+        idx = self.seg_index[doc_id]
+        margin = None
+        if self.mode != "fulldoc" and len(idx):
+            if self.mode == "rag_topk":
+                probes = self._attr_query_emb(table, attr)[None]
+                radii = [self.gamma_init]
+            else:
+                probes, radii = self._probes_for(table, attr)
+            best = None
+            for (ids, dists), rad in zip(idx.search(probes, 1), radii):
+                if len(ids) and rad > 0:
+                    m = (rad - float(dists[0])) / rad
+                    best = m if best is None else max(best, m)
+            if best is not None:
+                margin = min(1.0, max(0.0, best))
+        self._margin_cache[key] = margin
+        return margin

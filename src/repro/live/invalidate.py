@@ -7,7 +7,10 @@ Layers touched, in order:
   * session attr-value cache + escalation memo — entries keyed
     `(doc_id, attr)` for the mutated doc drop (`Session.drop_doc_state`);
     every other document's cached values survive (they are byte-identical
-    to fresh extraction, so keeping them is row-invisible).
+    to fresh extraction, so keeping them is row-invisible). Under a
+    cascade extractor (DESIGN.md §18) the same call drops the doc's
+    memoized difficulty estimates and tier-escalation memo entries —
+    stale routing evidence; the doc gets a fresh shot at the small tier.
   * sampling investments — under the default `sample_policy="exact"`,
     *every* table's `TableSample` drops on any mutation (rank-stratified
     sampling depends on the candidate distance ranking, which any
@@ -39,6 +42,10 @@ class CascadeStats:
     samples_retained: int = 0
     evidence_dropped: int = 0
     prefix_entries_dropped: int = 0
+    # model cascade (DESIGN.md §18): a mutated doc's memoized difficulty
+    # scores and tier-escalation memo entries are stale routing evidence
+    difficulty_dropped: int = 0
+    tier_memo_dropped: int = 0
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -80,6 +87,8 @@ class InvalidationCascade:
         dropped = self.session.drop_doc_state(doc_id)
         s.cache_entries_dropped += dropped["cache_entries"]
         s.escalations_dropped += dropped["escalations"]
+        s.difficulty_dropped += dropped.get("difficulty_estimates", 0)
+        s.tier_memo_dropped += dropped.get("tier_memo", 0)
         ret = self.session.retriever
         for table in sorted(self._tables_with_state()):
             if self.sample_policy == "exact":

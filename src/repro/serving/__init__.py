@@ -1,0 +1,21 @@
+"""Serving substrate (DESIGN.md §7, §10, §12, §14–§16): everything
+between an extraction prompt and its decoded tokens.
+
+Inputs are token-level `Request`s (prompt ids, decode budget, optional
+shared-prefix boundary and tenant tag); outputs are greedy decoded
+token ids plus per-engine stats. The layer's contract, enforced across
+every module here, is that serving optimizations are invisible in
+results: decoded output is byte-identical with batching, prefix reuse,
+paged vs slab KV layouts, speculative decoding, replica/mesh placement,
+and admission scheduling on or off — savings surface only in the stats
+and the cost ledger's separately-reported columns.
+
+  engine.py        slot-based continuous-batching engine, both KV
+                   layouts, chunked prefill, the speculative decode loop
+  prefix_cache.py  shared-prefix KV store (longest-prefix match, LRU,
+                   doc-tagged invalidation)
+  spec_decode.py   drafters: prompt-lookup n-grams, draft-model
+  replicas.py      data-parallel engines behind one shared queue
+  frontend.py      admission control, SLO scheduling, typed shedding
+  costs.py         per-architecture tokens -> seconds/Joules model
+"""

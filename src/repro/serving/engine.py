@@ -1,4 +1,6 @@
-"""Batched serving engine with continuous batching (slot-based).
+"""Batched serving engine with continuous batching (slot-based)
+(DESIGN.md §7). Inputs are token-level `Request`s; outputs are greedy
+decoded ids, byte-identical across every layout/optimization below.
 
 Two KV layouts (DESIGN.md §10/§12):
 

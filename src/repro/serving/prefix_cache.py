@@ -1,4 +1,6 @@
-"""Shared-prefix KV cache: longest-prefix-match store over prompt tokens.
+"""Shared-prefix KV cache: longest-prefix-match store over prompt tokens
+(DESIGN.md §10). Invariant: a hit changes prefill work, never decoded
+output — results are byte-identical with the cache on or off.
 
 QUEST plans issue hundreds of extraction calls whose prompts share a long
 template prefix (instruction + attribute description + evidence header) and

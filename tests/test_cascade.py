@@ -1,0 +1,391 @@
+"""Difficulty-aware model cascade (DESIGN.md §18): routing, escalation,
+parity, and live invalidation.
+
+The invariant everything leans on mirrors §14's speculation bar: the
+cascade can only change *which model* produced a value, never *which
+value* — `cascade="off"` is byte-identical to a plain ServedExtractor,
+`cascade="verify_all"` (route everything small, escalate everything) is
+byte-identical to target-only, and `cascade="on"` keeps exact row parity
+on this container because the §8.1 parse is deterministic in
+(doc, attr, segments). Around that sit the mechanism tests: deterministic
+memoized difficulty scores, sampling-stat folding, the exactly-once
+tier-escalation memo, ledger invariance of the logical token columns, and
+the live-mutation drop of difficulty estimates + memo entries.
+"""
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import DifficultyEstimator, Filter, Query, Session, conj
+from repro.core.ledger import CostLedger
+from repro.core.scheduler import BatchScheduler
+from repro.core.stats import SampleStats
+from repro.data import lm_data
+from repro.data.corpus import make_swde_corpus
+from repro.extract import CascadeExtractor, OracleExtractor, ServedExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+
+QWEN = "qwen2.5-3b"
+
+
+def _cfg():
+    return get_smoke_config(QWEN).replace(vocab_size=lm_data.VOCAB)
+
+
+def _small_cfg():
+    return _cfg().replace(num_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                          head_dim=16, d_ff=48)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(_cfg(), jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return init_params(_small_cfg(), jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_swde_corpus()
+
+
+def _engines(params, small_params, slots=2):
+    target = ServingEngine(_cfg(), params, slots=slots, max_len=1024,
+                           prefix_cache=True)
+    small = ServingEngine(_small_cfg(), small_params, slots=slots,
+                          max_len=1024, prefix_cache=True)
+    return target, small
+
+
+def _uni_docs(corpus, n):
+    return [d for d in sorted(corpus.docs) if "universities" in d][:n]
+
+
+# ------------------------------------------------------------ estimator ----
+
+
+def _folded_estimator(presence=1.0, n=4, cost=30.0, table="universities",
+                      attr="tuition", **kw):
+    est = DifficultyEstimator(None, **kw)
+    stats = SampleStats(table=table)
+    docs = [f"d{i}" for i in range(n)]
+    present = round(presence * n)
+    for i, d in enumerate(docs):
+        stats.record(d, attr, 1 if i < present else None, int(cost))
+    est.fold_sample(table, [attr], stats, sampled=docs)
+    return est
+
+
+def test_difficulty_scores_deterministic_and_memoized():
+    est = _folded_estimator(presence=1.0)
+    s1 = est.score("docA", "tuition", "universities")
+    s2 = est.score("docA", "tuition", "universities")
+    assert s1 == s2
+    assert est.stats.memo_hits == 1
+    # a second estimator with the same evidence scores identically
+    est2 = _folded_estimator(presence=1.0)
+    assert est2.score("docA", "tuition", "universities") == s1
+    assert 0.0 <= s1 <= 1.0
+
+
+def test_routing_rule_thresholds():
+    # full agreement + cheap context -> easy -> small tier
+    easy = _folded_estimator(presence=1.0, cost=20.0)
+    assert easy.route("d", "tuition", "universities") == "small"
+    # zero agreement + saturating context cost -> hard -> target tier
+    hard = _folded_estimator(presence=0.0, cost=400.0)
+    assert hard.route("d", "tuition", "universities") == "target"
+    # threshold=0 forces the target tier regardless of evidence
+    forced = _folded_estimator(presence=1.0, cost=20.0, threshold=0.0)
+    assert forced.route("d", "tuition", "universities") == "target"
+    # threshold=1 trusts the small tier with everything
+    trusting = _folded_estimator(presence=0.0, cost=500.0, threshold=1.0)
+    assert trusting.route("d", "tuition", "universities") == "small"
+
+
+def test_fold_sample_summary_and_predicted_split():
+    est = _folded_estimator(presence=0.75, n=4, cost=40.0)
+    info = est._attr[("universities", "tuition")]
+    assert info["presence"] == 0.75
+    assert info["n"] == 4
+    assert info["mean_cost"] == 40.0
+    split = est.predicted_split("universities", "tuition")
+    assert split is not None
+    assert abs(split["small"] + split["target"] - 1.0) < 1e-6
+    # unfolded attrs predict nothing
+    assert est.predicted_split("universities", "enrollment") is None
+
+
+def test_fold_sample_refreshes_stale_scores():
+    est = _folded_estimator(presence=1.0)
+    before = est.score("docA", "tuition", "universities")
+    # refold with contradicting evidence: memoized score must recompute
+    stats = SampleStats(table="universities")
+    for i in range(4):
+        stats.record(f"d{i}", "tuition", None, 30)
+    est.fold_sample("universities", ["tuition"], stats, sampled=[])
+    after = est.score("docA", "tuition", "universities")
+    assert after > before
+
+
+def test_drop_doc_removes_only_that_docs_estimates():
+    est = _folded_estimator()
+    est.score("docA", "tuition", "universities")
+    est.score("docB", "tuition", "universities")
+    assert est.drop_doc("docA") == 1
+    assert ("docA", "tuition") not in est._scores
+    assert ("docB", "tuition") in est._scores
+    assert est.stats.estimates_dropped == 1
+
+
+def test_retriever_margin_feeds_scores(corpus):
+    retr = TwoLevelRetriever(corpus, mode="rag_topk")
+    doc = _uni_docs(corpus, 1)[0]
+    margin = retr.score_margin(doc, "tuition", "universities")
+    assert margin is None or 0.0 <= margin <= 1.0
+    est = DifficultyEstimator(retr)
+    s = est.score(doc, "tuition", "universities", 30)
+    assert 0.0 <= s <= 1.0
+
+
+# ------------------------------------------------- extractor-level parity --
+
+
+def _extract_direct(corpus, ext, items):
+    """One extractor-level batch round over (doc, attr, [segment]) items."""
+    return ext.extract_batch(items)
+
+
+def _items_for(corpus, docs, attrs):
+    # full doc text as the segment: the §8.1 fallback parse can always
+    # find the value, so "on"-mode acceptance is exercised (a prefix slice
+    # would escalate everything and only test the verify_all path)
+    return [(d, a, [corpus.docs[d].text]) for d in docs for a in attrs]
+
+
+def test_cascade_off_byte_identical_to_served(corpus, params, small_params):
+    docs = _uni_docs(corpus, 2)
+    items = _items_for(corpus, docs, ["tuition", "enrollment"])
+
+    target, _ = _engines(params, small_params)
+    plain = ServedExtractor(corpus, target, max_new=6)
+    base = _extract_direct(corpus, plain, items)
+
+    target2, small2 = _engines(params, small_params)
+    casc = CascadeExtractor(corpus, target2, small2, cascade="off", max_new=6)
+    off = _extract_direct(corpus, casc, items)
+
+    assert off == base
+    assert casc.stats.small_requests == 0
+    assert casc.stats.routed_small == 0
+    assert small2.stats["decode_steps"] == 0  # the small engine never runs
+    # None small engine degrades to off, whatever mode was asked for
+    assert CascadeExtractor(corpus, target2, None, cascade="on",
+                            max_new=6).cascade == "off"
+
+
+def test_verify_all_escalates_everything_rows_identical(
+        corpus, params, small_params):
+    docs = _uni_docs(corpus, 2)
+    items = _items_for(corpus, docs, ["tuition", "enrollment"])
+
+    target, _ = _engines(params, small_params)
+    base = _extract_direct(corpus, ServedExtractor(corpus, target, max_new=6),
+                           items)
+
+    target2, small2 = _engines(params, small_params)
+    casc = CascadeExtractor(corpus, target2, small2, cascade="verify_all",
+                            max_new=6)
+    rows = _extract_direct(corpus, casc, items)
+
+    assert rows == base
+    assert casc.stats.routed_small == len(items)
+    assert casc.stats.escalations == len(items)    # verifier bounces all
+    assert casc.stats.accepted_small == 0
+    assert casc.stats.target_tokens_saved == 0     # pure waste, by design
+    assert casc.stats.small_requests == len(items)
+    assert small2.stats["decode_steps"] > 0
+
+
+def test_cascade_on_values_identical_and_saves_target_tokens(
+        corpus, params, small_params):
+    docs = _uni_docs(corpus, 2)
+    items = _items_for(corpus, docs, ["tuition", "enrollment"])
+
+    target, _ = _engines(params, small_params)
+    base = _extract_direct(corpus, ServedExtractor(corpus, target, max_new=6),
+                           items)
+
+    target2, small2 = _engines(params, small_params)
+    est = _folded_estimator(presence=1.0, cost=20.0)
+    stats = SampleStats(table="universities")
+    for i in range(4):
+        stats.record(f"d{i}", "enrollment", 1, 20)
+    est.fold_sample("universities", ["enrollment"], stats, sampled=[])
+    casc = CascadeExtractor(corpus, target2, small2, cascade="on",
+                            difficulty=est, max_new=6)
+    rows = _extract_direct(corpus, casc, items)
+
+    # §8.1 parse is deterministic per (doc, attr, segments): accepted
+    # small-tier values are exactly what the target would have produced
+    assert rows == base
+    assert casc.stats.accepted_small == len(items)
+    assert casc.stats.target_tokens_saved > 0
+    assert casc.stats.routed_small == len(items)
+    # inherited columns stayed target-tier-only
+    assert casc.stats.requests == 0
+    assert casc.stats.small_requests == len(items)
+
+
+def test_routing_is_deterministic_across_runs(corpus, params, small_params):
+    docs = _uni_docs(corpus, 3)
+    items = _items_for(corpus, docs, ["tuition", "enrollment"])
+
+    def run():
+        target, small = _engines(params, small_params)
+        est = _folded_estimator(presence=0.5, n=4, cost=30.0)
+        casc = CascadeExtractor(corpus, target, small, cascade="on",
+                                difficulty=est, max_new=6)
+        rows = _extract_direct(corpus, casc, items)
+        return rows, (casc.stats.routed_small, casc.stats.routed_target,
+                      casc.stats.escalations)
+
+    r1, s1 = run()
+    r2, s2 = run()
+    assert r1 == r2
+    assert s1 == s2
+
+
+def test_escalation_memo_exactly_once(corpus, params, small_params):
+    doc = _uni_docs(corpus, 1)[0]
+    # a segment with no parseable value: the decoded text won't parse and
+    # the §8.1 context fallback finds nothing -> verifier escalates
+    items = [(doc, "tuition", ["no evidence in this segment"])]
+
+    target, small = _engines(params, small_params)
+    est = _folded_estimator(presence=1.0, cost=10.0)
+    casc = CascadeExtractor(corpus, target, small, cascade="on",
+                            difficulty=est, max_new=6)
+
+    first = casc.extract_batch(items)
+    assert first[0][0] is None
+    assert casc.stats.escalations == 1
+    assert (doc, "tuition") in casc.tier_memo
+    small_reqs = casc.stats.small_requests
+
+    # second round: the memo routes straight to target — the small model
+    # is never paid twice for a (doc, attr) it already failed
+    second = casc.extract_batch(items)
+    assert second == first
+    assert casc.stats.small_requests == small_reqs
+    assert casc.stats.memo_target_routes == 1
+    assert casc.stats.escalations == 1
+
+
+def test_bad_cascade_mode_rejected(corpus, params, small_params):
+    target, small = _engines(params, small_params)
+    with pytest.raises(ValueError, match="unknown cascade mode"):
+        CascadeExtractor(corpus, target, small, cascade="sometimes")
+
+
+# ------------------------------------------- scheduler + session plumbing --
+
+
+def test_cascade_counters_flow_to_ledger(corpus, params, small_params):
+    docs = _uni_docs(corpus, 2)
+    items = [(d, a, "universities") for d in docs
+             for a in ("tuition", "enrollment")]
+
+    def run(mode):
+        target, small = _engines(params, small_params)
+        retr = TwoLevelRetriever(corpus, mode="rag_topk")
+        est = _folded_estimator(presence=1.0, cost=20.0)
+        est.retriever = retr
+        casc = CascadeExtractor(corpus, target, small, cascade=mode,
+                                difficulty=est, max_new=6)
+        ledger = CostLedger()
+        sched = BatchScheduler(retr, casc, ledger, {}, batch_size=2)
+        rows = sched.extract_many(items)
+        return rows, casc, ledger
+
+    rows_off, _, led_off = run("off")
+    rows_on, casc, led_on = run("on")
+    assert rows_on == rows_off
+    # logical token columns are cascade-invariant; savings reported apart
+    for col in ("input_tokens", "output_tokens", "total_tokens", "per_phase"):
+        assert led_on.snapshot()[col] == led_off.snapshot()[col]
+    snap = led_on.snapshot()
+    assert snap["cascade_small"] == casc.stats.accepted_small
+    assert snap["cascade_escalations"] == casc.stats.escalations
+    assert snap["target_tokens_saved"] == casc.stats.target_tokens_saved
+    if casc.stats.accepted_small:
+        assert snap["target_tokens_saved"] > 0
+
+
+def test_session_folds_difficulty_and_explains_tier_split(
+        corpus, params, small_params):
+    docs = _uni_docs(corpus, 8) + \
+        [d for d in sorted(corpus.docs) if "laptops" in d][:4]
+    sub = corpus.subset(docs)
+    target, small = _engines(params, small_params)
+    retr = TwoLevelRetriever(sub)
+    casc = CascadeExtractor(sub, target, small, cascade="on",
+                            difficulty=DifficultyEstimator(retr), max_new=6)
+    session = Session(retr, casc, batch_size=2)
+    query = Query(tables=["universities"],
+                  select=[("universities", "university_name")],
+                  where=conj(Filter("tuition", "<", 60000,
+                                    table="universities")))
+    session.execute(query)
+    sample = session._samples["universities"]
+    assert "tuition" in sample.difficulty
+    assert set(sample.difficulty["tuition"]) >= {"presence", "mean_cost", "n",
+                                                 "predicted_small"}
+    # explain() after the sampling phase reports the predicted tier mix
+    prepared = session.prepare(query)
+    stage = prepared.explain()["tables"][0]["stages"][0]
+    split = stage.get("predicted_tier_split")
+    assert split is not None
+    assert abs(split["small"] + split["target"] - 1.0) < 1e-6
+    assert "cascade small" in prepared.explain_text()
+
+
+# ------------------------------------------------------- live invalidation --
+
+
+def test_live_mutation_drops_difficulty_and_tier_memo():
+    from repro.data.corpus import make_wiki_corpus
+    from repro.live import LiveCorpus, LiveRetriever, LiveSession, render_edit
+
+    full = make_wiki_corpus(seed=0)
+    ids = [d for d in full.docs if full.docs[d].domain == "players"][:6]
+    live = LiveCorpus(full.subset(ids))
+    retr = LiveRetriever(live)
+    # an oracle extractor wearing the cascade's routing state: the drop
+    # path only needs `difficulty` / `tier_memo` attributes (duck-typed
+    # exactly like Session.drop_doc_state reads them)
+    ext = OracleExtractor(live)
+    ext.difficulty = DifficultyEstimator(retr)
+    ext.tier_memo = {(ids[0], "age"), (ids[1], "age")}
+    sess = LiveSession(live, retr, ext, batch_size=4)
+    casc = sess.cascade     # LiveSession wires its own InvalidationCascade
+
+    ext.difficulty.score(ids[0], "age", "players", 30)
+    ext.difficulty.score(ids[1], "age", "players", 30)
+
+    live.update(ids[0], render_edit(live, ids[0], "age", 41))
+
+    assert (ids[0], "age") not in ext.difficulty._scores
+    assert (ids[1], "age") in ext.difficulty._scores
+    assert (ids[0], "age") not in ext.tier_memo
+    assert (ids[1], "age") in ext.tier_memo
+    assert casc.stats.difficulty_dropped == 1
+    assert casc.stats.tier_memo_dropped == 1
+    # post-mutation the doc re-scores fresh (fresh shot at the small tier)
+    s = ext.difficulty.score(ids[0], "age", "players", 30)
+    assert 0.0 <= s <= 1.0
