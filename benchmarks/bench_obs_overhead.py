@@ -1,0 +1,149 @@
+"""Observability overhead gate (DESIGN.md §19).
+
+Telemetry must observe, never perturb. This bench runs the same oracle
+three-query session workload with tracing off (the `NULL_TRACER` default)
+and fully on (`Tracer(clock="ticks", level=2)` — every span site firing,
+per-barrier instants included) and gates, against the committed baseline:
+
+  invariants — rows byte-identical on vs. off; ledger token columns
+               (input/output tokens, llm_calls, extractions, per_phase)
+               byte-identical; session/scheduler counter snapshots
+               byte-identical; two traced runs byte-identical JSONL
+               (tick-clock determinism on the full workload); median
+               traced wall within the 5% overhead budget;
+  counters   — spans_emitted (trace coverage must not silently shrink).
+
+Wall measurement: median of `reps` alternating off/on runs — the oracle
+workload is pure Python, so the median is stable enough to hold a 5%
+budget without wall-clock noise dominating. The fraction is also
+reported (`wall_overhead_fraction`) but gated only through the invariant
+(spec_decode precedent: report walls, gate determinism).
+
+Emits `benchmarks/out/BENCH_obs_overhead.json`, gated by
+`compare.py --bench obs_overhead`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from pathlib import Path
+
+from repro.core import Filter, Query, Session, conj
+from repro.data.corpus import make_wiki_corpus
+from repro.extract import OracleExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.obs import LEVEL_FULL, Tracer
+
+OUT = Path(__file__).parent / "out"
+
+OVERHEAD_BUDGET = 0.05          # traced wall <= 1.05x untraced (median)
+
+LEDGER_COLUMNS = ("input_tokens", "output_tokens", "llm_calls",
+                  "extractions", "batches", "batched_extractions",
+                  "max_batch", "per_phase")
+
+
+def _queries():
+    return [
+        Query(tables=["players"], select=[("players", "player_name")],
+              where=conj(Filter("age", ">", 30, table="players"),
+                         Filter("all_stars", ">=", 5, table="players"))),
+        Query(tables=["teams"], select=[("teams", "location")],
+              where=Filter("championships", ">", 14, table="teams")),
+        Query(tables=["owners"], select=[("owners", "industry")],
+              where=Filter("net_worth", ">", 3.0, table="owners")),
+    ]
+
+
+def _run_once(corpus, tracer):
+    """One multiplexed three-query session; returns (rows per query,
+    ledger snapshot, scheduler counter snapshot, wall seconds)."""
+    sess = Session(TwoLevelRetriever(corpus), OracleExtractor(corpus),
+                   batch_size=8, tracer=tracer)
+    t0 = time.perf_counter()
+    handles = [sess.submit(q) for q in _queries()]
+    results = [h.result() for h in handles]
+    wall = time.perf_counter() - t0
+    rows = [sorted(tuple(sorted(r["_docs"].items())) for r in res.rows)
+            for res in results]
+    snap = sess.ledger.snapshot()
+    ledger = {k: snap[k] for k in LEDGER_COLUMNS}
+    return rows, ledger, sess.scheduler.stats.snapshot(), wall
+
+
+def run(smoke: bool = False, quick: bool = False):
+    OUT.mkdir(exist_ok=True)
+    small = smoke or quick
+    reps = 5 if small else 9
+    corpus = make_wiki_corpus(seed=0)
+
+    # determinism: two fresh fully-traced runs, byte-identical JSONL
+    tr_a = Tracer(clock="ticks", level=LEVEL_FULL)
+    tr_b = Tracer(clock="ticks", level=LEVEL_FULL)
+    rows_a, ledger_a, sched_a, _ = _run_once(corpus, tr_a)
+    _run_once(corpus, tr_b)
+    trace_deterministic = tr_a.to_jsonl() == tr_b.to_jsonl()
+
+    # parity: untraced run must match the traced one byte for byte
+    rows_off, ledger_off, sched_off, _ = _run_once(corpus, None)
+    rows_identical = rows_a == rows_off
+    ledger_identical = ledger_a == ledger_off
+    counters_identical = sched_a == sched_off
+
+    # overhead: alternate off/on, median wall each
+    walls_off, walls_on = [], []
+    for _ in range(reps):
+        walls_off.append(_run_once(corpus, None)[3])
+        walls_on.append(_run_once(
+            corpus, Tracer(clock="ticks", level=LEVEL_FULL))[3])
+    wall_off = statistics.median(walls_off)
+    wall_on = statistics.median(walls_on)
+    overhead = wall_on / wall_off - 1.0
+
+    result = {
+        "bench": "obs_overhead", "smoke": bool(small),
+        "reps": reps, "queries": len(_queries()),
+        # invariants
+        "rows_identical": bool(rows_identical),
+        "ledger_token_columns_identical": bool(ledger_identical),
+        "counters_identical": bool(counters_identical),
+        "trace_deterministic": bool(trace_deterministic),
+        "overhead_within_budget": bool(overhead <= OVERHEAD_BUDGET),
+        # gated counter: trace coverage must not silently shrink
+        "spans_emitted": len(tr_a.spans),
+        # reported context
+        "overhead_budget": OVERHEAD_BUDGET,
+        "wall_overhead_fraction": round(overhead, 4),
+        "wall_off_s": round(wall_off, 4),
+        "wall_on_s": round(wall_on, 4),
+        "ledger_tokens": ledger_a["input_tokens"] + ledger_a["output_tokens"],
+    }
+    with open(OUT / "BENCH_obs_overhead.json", "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"obs_overhead: {len(tr_a.spans)} spans over "
+          f"{result['queries']} queries | wall {wall_off*1e3:.1f}ms off -> "
+          f"{wall_on*1e3:.1f}ms on ({overhead:+.2%}, budget "
+          f"{OVERHEAD_BUDGET:.0%}) | rows identical: {rows_identical} | "
+          f"counters identical: {counters_identical} | "
+          f"trace deterministic: {trace_deterministic}")
+
+    assert rows_identical, "tracing changed result rows"
+    assert ledger_identical, "tracing changed ledger token columns"
+    assert counters_identical, "tracing changed scheduler counters"
+    assert trace_deterministic, "tick-clock traces were not byte-identical"
+    assert overhead <= OVERHEAD_BUDGET, (
+        f"tracing overhead {overhead:.2%} exceeds the "
+        f"{OVERHEAD_BUDGET:.0%} budget")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI-sized workload")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke, quick=args.quick)

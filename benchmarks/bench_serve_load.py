@@ -38,6 +38,7 @@ import jax
 from repro.configs import get_smoke_config
 from repro.data import lm_data
 from repro.models import init_params
+from repro.obs import Tracer
 from repro.serving.costs import LatencySeries
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.frontend import (DONE, SHED, SHED_QUEUE_FULL,
@@ -63,10 +64,11 @@ def _workload(n_requests: int, max_new: int):
     return reqs, max_new
 
 
-def _engine(cfg, params, *, slots: int, num_pages: int):
+def _engine(cfg, params, *, slots: int, num_pages: int, tracer=None):
     return ServingEngine(cfg, params, slots=slots, max_len=192,
                          kv_layout="paged", page_size=16,
-                         num_pages=num_pages, prefix_cache=True)
+                         num_pages=num_pages, prefix_cache=True,
+                         tracer=tracer)
 
 
 def _serial_outputs(cfg, params, workload, max_new, *, slots, num_pages):
@@ -102,10 +104,15 @@ def run(smoke: bool = False, quick: bool = False):
     wall_serial = time.time() - t0
 
     # ---------------------------------------------------------- load phase --
+    # full-level tick tracer on the loaded run: the Chrome trace artifact
+    # (TRACE_serve_load.json, uploaded by CI) shows admission/defer/engine
+    # phases per pump; rows stay byte-identical (bench_obs_overhead gates)
     t0 = time.time()
-    eng = _engine(cfg, params, slots=slots, num_pages=num_pages)
+    tracer = Tracer(clock="ticks", level=2)
+    eng = _engine(cfg, params, slots=slots, num_pages=num_pages,
+                  tracer=tracer)
     fe = ServingFrontend(eng, tenant_weights=dict(TENANTS),
-                         max_prefill_chunks=2, clock="ticks")
+                         max_prefill_chunks=2, clock="ticks", tracer=tracer)
     pool_baseline = eng.pool_free_pages()
     tickets, escaped = [], False
     pending = list(enumerate(workload))   # (rid, (tenant, toks, shared))
@@ -176,9 +183,11 @@ def run(smoke: bool = False, quick: bool = False):
         "admission_deferred": eng.stats["admission_deferred"],
         "pool_exhausted_absorbed": fe.stats["pool_exhausted_absorbed"],
         "shed_rate_probe": round(len(shed) / len(probe), 4),
+        "trace_spans": len(tracer.spans),
         "wall_serial_s": round(wall_serial, 3),
         "wall_load_s": round(wall_load, 3),
     }
+    tracer.write_chrome(OUT / "TRACE_serve_load.json")
     with open(OUT / "BENCH_serve_load.json", "w") as f:
         json.dump(result, f, indent=2)
     with open(OUT / "serve_load.csv", "w", newline="") as f:

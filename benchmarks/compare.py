@@ -27,6 +27,11 @@ import json
 import sys
 from pathlib import Path
 
+try:                                    # PYTHONPATH=src (how CI invokes us)
+    from repro.obs.metrics import schema_stem
+except ImportError:                     # standalone diffing still works
+    schema_stem = None
+
 HERE = Path(__file__).parent
 BASELINES = HERE / "baselines"
 FRESH = HERE / "out"
@@ -126,6 +131,18 @@ SPECS = {
         higher=["target_decode_token_reduction", "routed_small_fraction",
                 "f1_cascade", "ledger_target_tokens_saved"],
     ),
+    # observability must observe, never perturb (DESIGN.md §19): rows,
+    # ledger token columns and counter snapshots byte-identical tracing
+    # on vs. off; tick-clock traces byte-identical across runs; median
+    # traced wall within the bench's 5% budget. Wall fractions are
+    # reported, not ratio-gated (they sit in run-to-run noise); span
+    # coverage is gated so the trace cannot silently shrink.
+    "obs_overhead": spec(
+        invariants=["rows_identical", "ledger_token_columns_identical",
+                    "counters_identical", "trace_deterministic",
+                    "overhead_within_budget"],
+        higher=["spans_emitted"],
+    ),
 }
 
 
@@ -165,6 +182,35 @@ def _check_metric(name, fresh_v, base_v, direction, tol):
                 f"{'regressed' if not ok else 'ok'} {worse:+.1%})")
 
 
+_META_KEYS = frozenset({"bench", "smoke"})
+
+
+def _drift_warnings(bench: str, fresh: dict, base: dict) -> None:
+    """Schema-driven counter-drift report (DESIGN.md §19): a numeric key
+    the fresh run reports but the committed baseline lacks is ungated
+    until the baseline is re-committed. If the spelling also derives from
+    no metric in the obs registry schema (`schema_stem`), flag it harder —
+    it is likely a typo or an undeclared counter, the exact drift the
+    typed registry exists to prevent."""
+    if schema_stem is None:
+        return
+    for key in sorted(fresh):
+        if key in base or key in _META_KEYS:
+            continue
+        if not isinstance(fresh[key], (int, float)) or \
+                isinstance(fresh[key], bool):
+            continue
+        stem = schema_stem(key)
+        if stem is not None:
+            print(f"[{bench}] ok   {key}: WARN ungated new counter "
+                  f"(schema stem {stem!r}) — re-commit the baseline to "
+                  f"start gating it")
+        else:
+            print(f"[{bench}] ok   {key}: WARN new counter matches NO "
+                  f"metric in the obs schema — declare it in "
+                  f"repro.obs.metrics.SCHEMA or fix the spelling")
+
+
 def compare_bench(bench: str, tol: float, wall_tol: float) -> bool:
     spec = SPECS[bench]
     base = _load(BASELINES / f"BENCH_{bench}.json")
@@ -192,6 +238,7 @@ def compare_bench(bench: str, tol: float, wall_tol: float) -> bool:
                                      direction, tol)
         print(f"[{bench}] {'ok  ' if good else 'FAIL'} {detail}")
         ok = ok and good
+    _drift_warnings(bench, fresh, base)
     for num, den in spec["wall"]:
         # same missing-counter rules as metrics: absent from the baseline
         # warns, absent from the fresh run fails (a 0-coerced numerator

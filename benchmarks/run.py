@@ -19,15 +19,15 @@ def main() -> None:
                     help="baselines|filter_groups|ordering|join|ablations|"
                          "kernels|roofline|batching|prefix_cache|multi_query|"
                          "paged_kv|spec_decode|sharded_serving|serve_load|"
-                         "live_corpus|cascade")
+                         "live_corpus|cascade|obs_overhead")
     args = ap.parse_args()
 
     from . import (bench_ablations, bench_baselines, bench_batching,
                    bench_cascade, bench_filter_groups, bench_join,
                    bench_kernels, bench_live_corpus, bench_multi_query,
-                   bench_ordering, bench_paged_kv, bench_prefix_cache,
-                   bench_roofline, bench_serve_load, bench_sharded_serving,
-                   bench_spec_decode)
+                   bench_obs_overhead, bench_ordering, bench_paged_kv,
+                   bench_prefix_cache, bench_roofline, bench_serve_load,
+                   bench_sharded_serving, bench_spec_decode)
     from .common import BenchContext
 
     ctx = BenchContext()
@@ -42,6 +42,7 @@ def main() -> None:
         "serve_load": lambda: bench_serve_load.run(quick=args.quick),
         "live_corpus": lambda: bench_live_corpus.run(quick=args.quick),
         "cascade": lambda: bench_cascade.run(quick=args.quick),
+        "obs_overhead": lambda: bench_obs_overhead.run(quick=args.quick),
         "ordering": lambda: bench_ordering.run(ctx, quick=args.quick),
         "join": lambda: bench_join.run(ctx, quick=args.quick),
         "filter_groups": lambda: bench_filter_groups.run(ctx, quick=args.quick),

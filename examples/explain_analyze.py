@@ -1,0 +1,72 @@
+"""EXPLAIN ANALYZE + trace profiling of one QUEST query (DESIGN.md §19).
+
+    PYTHONPATH=src python examples/explain_analyze.py
+
+Attach one `Tracer` to a Session, run a query, then:
+
+  * `handle.report_text()` prints the estimated-vs-actual table: per plan
+    stage, the optimizer's selectivity/cost estimates (from the sampling
+    investment) next to what the run actually measured — filters
+    evaluated/passed, tokens and invocations per attribute — plus the
+    prefix/speculation/cascade savings columns;
+  * the trace exports to `explain_analyze_trace.json` in Chrome
+    trace-event format — open https://ui.perfetto.dev and drag the file
+    in (or chrome://tracing) to see the session -> scheduler -> engine
+    span tree on a timeline.
+
+The wall clock is used here so the Perfetto timeline is real time; pass
+`Tracer(clock="ticks")` instead for byte-deterministic traces (what
+tests/test_obs.py pins).
+"""
+import json
+from pathlib import Path
+
+from repro.core import Filter, Query, Session, conj
+from repro.data.corpus import make_wiki_corpus
+from repro.extract import OracleExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.obs import Tracer
+
+TRACE_PATH = Path(__file__).parent / "explain_analyze_trace.json"
+
+
+def main():
+    corpus = make_wiki_corpus(seed=0)
+    tracer = Tracer(clock="wall", level="full")   # obs_level knob: off|phases|full
+    session = Session(TwoLevelRetriever(corpus), OracleExtractor(corpus),
+                      batch_size=8, tracer=tracer)
+
+    query = Query(
+        tables=["players"],
+        select=[("players", "player_name")],
+        where=conj(Filter("age", ">", 30, table="players"),
+                   Filter("all_stars", ">=", 5, table="players")),
+    )
+    prepared = session.prepare(query)
+    print("ESTIMATES (explain, before paying):")
+    print(prepared.explain_text())
+
+    handle = prepared.submit()
+    rows = list(handle.rows())
+    print(f"\n{len(rows)} rows; first 3: "
+          f"{[r['players.player_name'] for r in rows[:3]]}")
+
+    print("\n" + handle.report_text())
+
+    report = handle.report()
+    for t in report["tables"]:
+        for st in t["stages"]:
+            est, act = st["est_selectivity"], st["actual_selectivity"]
+            if est is not None and act is not None:
+                print(f"  residual {st['attr']}: est sel {est:.3f} vs "
+                      f"actual {act:.3f} ({act - est:+.3f})")
+
+    tracer.write_chrome(TRACE_PATH)
+    n_events = len(json.loads(TRACE_PATH.read_text())["traceEvents"])
+    print(f"\nwrote {TRACE_PATH.name}: {n_events} events "
+          f"({len(tracer.spans)} spans) — open https://ui.perfetto.dev "
+          f"and drop the file in to browse the timeline")
+
+
+if __name__ == "__main__":
+    main()

@@ -146,6 +146,9 @@ class QueryRun:
         self.ctx_hook = ctx_hook
         self._plan_log: dict = {}
         self.sampling_reused: dict = {}     # table -> bool
+        # EXPLAIN ANALYZE actuals (DESIGN.md §19): per-filter short-circuit
+        # outcomes, keyed (table, str(filter)) to join with explain() stages
+        self.filter_evals: dict = {}        # -> [evaluated, passed]
 
     # ------------------------------------------------------------ basics --
 
@@ -290,7 +293,12 @@ class QueryRun:
         short-circuit order *within* this document is exactly the serial one."""
         if node.kind == "filter":
             v = yield from self._extract_co(doc_id, node.filter.attr, ctx.name)
-            return node.filter.evaluate(v)
+            ok = node.filter.evaluate(v)
+            ev = self.filter_evals.setdefault((ctx.name, str(node.filter)),
+                                              [0, 0])
+            ev[0] += 1
+            ev[1] += 1 if ok else 0
+            return ok
         if node.kind == "and":
             for c in node.children:
                 ok = yield from self._eval_plan_co(c, ctx, doc_id)

@@ -34,6 +34,12 @@ class CostLedger:
     extractions: int = 0
     wall_time_s: float = 0.0
     per_phase: dict = field(default_factory=dict)   # phase -> token count
+    # per-attribute attribution (DESIGN.md §19): tokens/calls by the attr
+    # that was being extracted — the "actual" side EXPLAIN ANALYZE joins
+    # against explain()'s per-stage estimates. Batch-invariant like every
+    # token column (charges are identical, only their grouping changes).
+    per_attr: dict = field(default_factory=dict)        # attr -> tokens
+    per_attr_calls: dict = field(default_factory=dict)  # attr -> charges
     # per-batch accounting (DESIGN.md §9): token totals are batch-invariant,
     # so batching shows up here and in wall time, never in the token columns
     batches: int = 0
@@ -73,14 +79,19 @@ class CostLedger:
         return CostLedger(parent=self,
                           tenant=self.tenant if tenant is None else tenant)
 
-    def charge(self, *, inp: int, out: int = 0, calls: int = 1, phase: str = "query"):
+    def charge(self, *, inp: int, out: int = 0, calls: int = 1,
+               phase: str = "query", attr: Optional[str] = None):
         self.input_tokens += inp
         self.output_tokens += out
         self.llm_calls += calls
         self.extractions += 1
         self.per_phase[phase] = self.per_phase.get(phase, 0) + inp + out
+        if attr is not None:
+            self.per_attr[attr] = self.per_attr.get(attr, 0) + inp + out
+            self.per_attr_calls[attr] = self.per_attr_calls.get(attr, 0) + calls
         if self.parent is not None:
-            self.parent.charge(inp=inp, out=out, calls=calls, phase=phase)
+            self.parent.charge(inp=inp, out=out, calls=calls, phase=phase,
+                               attr=attr)
 
     def record_batch(self, n: int):
         self.batches += 1
@@ -113,6 +124,8 @@ class CostLedger:
             "llm_calls": self.llm_calls,
             "extractions": self.extractions,
             "per_phase": dict(self.per_phase),
+            "per_attr": dict(self.per_attr),
+            "per_attr_calls": dict(self.per_attr_calls),
             "batches": self.batches,
             "batched_extractions": self.batched_extractions,
             "max_batch": self.max_batch,
@@ -150,4 +163,10 @@ class CostLedger:
         for d in (self.per_phase, other.per_phase):
             for k, v in d.items():
                 out.per_phase[k] = out.per_phase.get(k, 0) + v
+        for src, dst in ((self.per_attr, out.per_attr),
+                         (other.per_attr, out.per_attr),
+                         (self.per_attr_calls, out.per_attr_calls),
+                         (other.per_attr_calls, out.per_attr_calls)):
+            for k, v in src.items():
+                dst[k] = dst.get(k, 0) + v
         return out

@@ -42,26 +42,41 @@ never change values or token columns, so the parity bar is unaffected).
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
 from typing import Optional
 
 from repro.data.tokens import count_tokens
+from repro.obs import MetricsRegistry, StatsDict, as_tracer
+from repro.obs.metrics import SCHEDULER_STATS
 
 PROMPT_OVERHEAD = 40      # instruction tokens per extraction call
 OUTPUT_TOKENS = 12        # answer tokens per extraction call
 
 
-@dataclass
 class SchedulerStats:
-    rounds: int = 0           # extract_batch submissions
-    submitted: int = 0        # extractions actually sent to the extractor
-    dedup_hits: int = 0       # duplicate (doc, attr) folded into one charge
-    cache_hits: int = 0       # needs answered from the engine cache
-    empty_retrievals: int = 0  # no relevant segments -> free negative
-    max_batch: int = 0
+    """Scheduler counters, registry-backed (DESIGN.md §19): same attribute
+    surface as the old dataclass (`stats.rounds += 1`, `snapshot()`), but
+    each field lives in a `scheduler.*` instrument of a `MetricsRegistry`
+    — so the counters ride the schema (touching an undeclared field is a
+    hard error) and export through the registry's Prometheus exposition.
+    Fields: rounds (extract_batch submissions), submitted (extractions
+    sent), dedup_hits, cache_hits, empty_retrievals, max_batch."""
+
+    def __init__(self, registry: MetricsRegistry = None):
+        object.__setattr__(self, "_d",
+                           StatsDict(registry or MetricsRegistry(),
+                                     "scheduler", SCHEDULER_STATS))
+
+    def __getattr__(self, key):
+        try:
+            return self.__dict__["_d"][key]
+        except KeyError:
+            raise AttributeError(key) from None
+
+    def __setattr__(self, key, value) -> None:
+        self._d[key] = value
 
     def snapshot(self) -> dict:
-        return dict(self.__dict__)
+        return self._d.snapshot()
 
 
 class RunQueue:
@@ -112,7 +127,8 @@ class BatchScheduler:
 
     def __init__(self, retriever, extractor, ledger, cache: dict, *,
                  batch_size: int = 1, queue_depth: int = 32,
-                 round_token_budget: Optional[int] = None):
+                 round_token_budget: Optional[int] = None,
+                 tracer=None, metrics: MetricsRegistry = None):
         self.retriever = retriever
         self.extractor = extractor
         self.ledger = ledger
@@ -120,7 +136,8 @@ class BatchScheduler:
         self.batch_size = max(1, int(batch_size))
         self.queue_depth = max(1, int(queue_depth))
         self.round_token_budget = round_token_budget
-        self.stats = SchedulerStats()
+        self.tracer = as_tracer(tracer)
+        self.stats = SchedulerStats(metrics)
 
     # ------------------------------------------------------- coroutines ----
 
@@ -188,9 +205,13 @@ class BatchScheduler:
         self._resolve(needs, phase=phase, owners=owners)
 
     def _resolve(self, keys: list, *, phase: str, owners: dict = None) -> None:
-        keys = self._group_by_prefix(keys)
-        for chunk in self._chunks(keys):
-            self._extract_chunk(chunk, phase=phase, owners=owners)
+        if not keys:
+            return
+        with self.tracer.span("scheduler.round", kind="scheduler",
+                              needs=len(keys), phase=phase):
+            keys = self._group_by_prefix(keys)
+            for chunk in self._chunks(keys):
+                self._extract_chunk(chunk, phase=phase, owners=owners)
 
     def _chunks(self, keys: list):
         """Cut the grouped round into extract_batch chunks: by count alone
@@ -253,16 +274,20 @@ class BatchScheduler:
         hits0, saved0 = self._prefix_stats()
         spec0 = self._spec_stats()
         casc0 = self._cascade_stats()
-        if owners is not None and getattr(self.extractor, "accepts_owners",
-                                          False):
-            # opt-in protocol extension: the serving path maps each item's
-            # owning child ledger to its tenant for admission control.
-            # Gated on the attribute so duck-typed extractors (tests,
-            # oracle stubs) keep the positional-only signature.
-            out = self.extractor.extract_batch(
-                items, owners=[owners.get(k) for k in slots])
-        else:
-            out = self.extractor.extract_batch(items)
+        chunk_span = self.tracer.span(
+            "scheduler.chunk", kind="scheduler", level=2, items=len(items),
+            attrs_grouped=len({(a, t) for _d, a, t in chunk}))
+        with chunk_span:
+            if owners is not None and getattr(self.extractor,
+                                              "accepts_owners", False):
+                # opt-in protocol extension: the serving path maps each
+                # item's owning child ledger to its tenant for admission
+                # control. Gated on the attribute so duck-typed extractors
+                # (tests, oracle stubs) keep the positional-only signature.
+                out = self.extractor.extract_batch(
+                    items, owners=[owners.get(k) for k in slots])
+            else:
+                out = self.extractor.extract_batch(items)
         hits1, saved1 = self._prefix_stats()
         spec1 = self._spec_stats()
         casc1 = self._cascade_stats()
@@ -278,7 +303,7 @@ class BatchScheduler:
         for (doc_id, attr), (value, inp_tokens) in zip(slots, out):
             ledger = (owners or {}).get((doc_id, attr)) or self.ledger
             ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
-                          out=OUTPUT_TOKENS, phase=phase)
+                          out=OUTPUT_TOKENS, phase=phase, attr=attr)
             self.cache[(doc_id, attr)] = value
 
     def record_owner_batches(self, ledgers) -> None:
@@ -316,12 +341,16 @@ class BatchScheduler:
             hits0, saved0 = self._prefix_stats()
             spec0 = self._spec_stats()
             casc0 = self._cascade_stats()
-            if owners is not None and getattr(self.extractor,
-                                              "accepts_owners", False):
-                res = self.extractor.extract_full_doc_batch(
-                    chunk, owners=owners[i:i + self.batch_size])
-            else:
-                res = self.extractor.extract_full_doc_batch(chunk)
+            samp_span = self.tracer.span("scheduler.sampling_chunk",
+                                         kind="scheduler", level=2,
+                                         docs=len(chunk))
+            with samp_span:
+                if owners is not None and getattr(self.extractor,
+                                                  "accepts_owners", False):
+                    res = self.extractor.extract_full_doc_batch(
+                        chunk, owners=owners[i:i + self.batch_size])
+                else:
+                    res = self.extractor.extract_full_doc_batch(chunk)
             hits1, saved1 = self._prefix_stats()
             spec1 = self._spec_stats()
             casc1 = self._cascade_stats()

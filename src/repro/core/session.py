@@ -48,6 +48,8 @@ import time
 from dataclasses import dataclass
 from typing import Iterator, Optional, Union
 
+from repro.obs import MetricsRegistry, as_tracer, build_report, render_report
+
 from .executor import QueryResult, QueryRun, TableSample, table_query_attrs
 from .expr import Query, QueryError, iter_filters
 from .ledger import CostLedger
@@ -200,6 +202,7 @@ class QueryHandle:
         self._t0 = time.time()
         self.deadline = (self._t0 + deadline_s
                          if deadline_s is not None else None)
+        self._span = -1                     # tracer id of the lifecycle span
 
     def _make_run(self) -> None:
         """(Re-)build the query's execution state machine from current
@@ -266,6 +269,16 @@ class QueryHandle:
         if self._error is not None:
             raise self._error
         return self._result
+
+    def report(self) -> dict:
+        """EXPLAIN ANALYZE (DESIGN.md §19): estimated-vs-actual per plan
+        stage — selectivity, tokens per invocation, tier split — plus the
+        savings columns and (when a tracer is attached) per-kind wall
+        attribution. The query must have finished."""
+        return build_report(self)
+
+    def report_text(self) -> str:
+        return render_report(self.report())
 
     # -- session-side hooks ----------------------------------------------
 
@@ -349,7 +362,8 @@ class Session:
                  ledger: Optional[CostLedger] = None,
                  batch_size: int = 1, queue_depth: int = 32,
                  round_token_budget: Optional[int] = None,
-                 table_context_hook=None):
+                 table_context_hook=None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         self.retriever = retriever
         self.extractor = extractor
         self.sample_rate = sample_rate
@@ -360,10 +374,21 @@ class Session:
         self.table_context_hook = table_context_hook
         self.cache: dict = {}               # (doc_id, attr) -> value
         self._escalated: set = set()        # keys already retried full-doc
+        # observability (DESIGN.md §19): tracer defaults to the shared
+        # no-op; the registry holds session.* and scheduler.* instruments
+        # (share one registry across session/engine/frontend for a single
+        # exposition surface — but one registry per engine)
+        self.tracer = as_tracer(tracer)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m = {k: self.metrics.counter(f"session.{k}")
+                   for k in ("queries", "queries_finished", "queries_failed",
+                             "steps")}
         self.scheduler = BatchScheduler(retriever, extractor, self.ledger,
                                         self.cache, batch_size=batch_size,
                                         queue_depth=queue_depth,
-                                        round_token_budget=round_token_budget)
+                                        round_token_budget=round_token_budget,
+                                        tracer=self.tracer,
+                                        metrics=self.metrics)
         self._samples: dict = {}    # table -> TableSample | _SampleReservation
         self._active: list = []     # in-flight QueryHandles, submit order
         self._tenant_ledgers: dict = {}     # tenant -> per-tenant CostLedger
@@ -499,6 +524,10 @@ class Session:
         handle = QueryHandle(self, prepared, tenant=tenant,
                              priority=priority, deadline_s=deadline_s)
         self._active.append(handle)
+        self._m["queries"].inc()
+        handle._span = self.tracer.begin(
+            "session.query", kind="query", qid=handle.qid,
+            tenant=handle.tenant, tables=list(handle.query.tables))
         return handle
 
     def execute(self, query: Union[PreparedQuery, Query]) -> QueryResult:
@@ -551,15 +580,18 @@ class Session:
         self._expire_deadlines()
         if not self._active:
             return False
+        self._m["steps"].inc()
         work = _RoundWork()
         progressed = False
-        for h in list(self._active):
-            if h not in self._active:   # cancelled by a hook mid-round
-                continue
-            progressed |= self._pump(h, work)
-        if not work.empty:
-            progressed = True
-            self._resolve_work(work)
+        with self.tracer.span("session.step", kind="session",
+                              in_flight=len(self._active)):
+            for h in list(self._active):
+                if h not in self._active:   # cancelled by a hook mid-round
+                    continue
+                progressed |= self._pump(h, work)
+            if not work.empty:
+                progressed = True
+                self._resolve_work(work)
         self.ledger.wall_time_s += time.time() - t0
         if not progressed and self._active:
             raise RuntimeError(
@@ -584,10 +616,15 @@ class Session:
                 h.send_value = None
                 progressed = True
                 kind = op[0]
+                if self.tracer.enabled(2):
+                    self.tracer.instant("query.barrier", kind="query",
+                                        level=2, qid=h.qid, barrier=kind)
                 if kind == "rows":
                     h._emit(op[1])
                 elif kind == "sample_publish":
                     self._publish_sample(h, op[1])
+                    self.tracer.instant("query.sample_publish", kind="query",
+                                        qid=h.qid, table=op[1].table)
                 elif kind == "sample_acquire":
                     got = self._try_acquire(h, op[1], frozenset(op[2]))
                     if got is None:
@@ -648,7 +685,9 @@ class Session:
                 spans.append((b, len(items), len(b.items)))
                 items.extend(b.items)
                 owners.extend([h.ledger] * len(b.items))
-            res = self.scheduler.extract_full_doc_items(items, owners)
+            with self.tracer.span("session.sampling_round", kind="session",
+                                  docs=len(items)):
+                res = self.scheduler.extract_full_doc_items(items, owners)
             for b, off, n in spans:
                 b.value = {d: r for (d, _a), r in
                            zip(b.items, res[off:off + n])}
@@ -659,7 +698,9 @@ class Session:
             b.value = {(d, a): self.cache.get((d, a)) for d, a, _t in b.keys}
             b.ready = True
         if work.escalate:
-            self._resolve_escalations(work.escalate)
+            with self.tracer.span("session.escalate_round", kind="session",
+                                  queries=len(work.escalate)):
+                self._resolve_escalations(work.escalate)
 
     def _resolve_escalations(self, escalations: list) -> None:
         """Full-document-prompt retries for output-critical attrs
@@ -690,7 +731,7 @@ class Session:
             self.scheduler.record_owner_batches(h.ledger for _d, _a, h in chunk)
             for (d, a, h), (value, inp_tokens) in zip(chunk, out):
                 h.ledger.charge(inp=inp_tokens + PROMPT_OVERHEAD,
-                                out=OUTPUT_TOKENS, phase="query")
+                                out=OUTPUT_TOKENS, phase="query", attr=a)
                 if value is not None:
                     self.cache[(d, a)] = value
         for _h, b in escalations:
@@ -798,8 +839,12 @@ class Session:
         h._finish(meta)
         self._active.remove(h)
         self._release(h)
+        self._m["queries_finished"].inc()
+        self.tracer.end(h._span, rows=len(h._rows))
 
     def _failed(self, h: QueryHandle, err: BaseException) -> None:
         h._fail(err)
         self._active.remove(h)
         self._release(h)
+        self._m["queries_failed"].inc()
+        self.tracer.end(h._span, error=type(err).__name__)

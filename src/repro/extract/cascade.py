@@ -44,6 +44,7 @@ from dataclasses import dataclass
 from repro.core.difficulty import DifficultyEstimator
 from repro.data import lm_data
 from repro.data.tokens import count_tokens
+from repro.obs import as_tracer
 
 from .served import ServedExtractor, ServedStats
 
@@ -133,26 +134,30 @@ class CascadeExtractor(ServedExtractor):
         takes it)."""
         outs = {}
         es = self.small_engine.stats
+        # spans land on the *target* engine's tracer: one trace per system
+        tracer = as_tracer(getattr(self.engine, "tracer", None))
         hits0, saved0 = es["prefix_hits"], es["prefix_saved_tokens"]
         spec0 = (es["draft_tokens"], es["accepted_tokens"],
                  es["decode_steps_saved"])
-        window = self.small_engine.queue_depth or len(reqs)
-        for i in range(0, len(reqs), max(window, 1)):
-            chunk = reqs[i:i + max(window, 1)]
-            self.small_engine.submit_many(chunk)
-            done = self.small_engine.run()
-            self.stats.batches += 1
-            self.stats.max_batch = max(self.stats.max_batch, len(chunk))
-            for req in chunk:
-                if req.rid not in done:
-                    failed = self.small_engine.failed.get(req.rid)
-                    raise RuntimeError(
-                        f"small-tier request {req.rid} failed: "
-                        f"{failed.error if failed else 'not in finished set'}")
-                out = done[req.rid].out
-                self.stats.small_generated_tokens += len(out)
-                outs[req.rid] = lm_data.decode(out)
-        self._note_round_deltas(es, hits0, saved0, spec0)
+        with tracer.span("cascade.small_round", kind="cascade",
+                         reqs=len(reqs)):
+            window = self.small_engine.queue_depth or len(reqs)
+            for i in range(0, len(reqs), max(window, 1)):
+                chunk = reqs[i:i + max(window, 1)]
+                self.small_engine.submit_many(chunk)
+                done = self.small_engine.run()
+                self.stats.batches += 1
+                self.stats.max_batch = max(self.stats.max_batch, len(chunk))
+                for req in chunk:
+                    if req.rid not in done:
+                        failed = self.small_engine.failed.get(req.rid)
+                        raise RuntimeError(
+                            f"small-tier request {req.rid} failed: "
+                            f"{failed.error if failed else 'not in finished set'}")
+                    out = done[req.rid].out
+                    self.stats.small_generated_tokens += len(out)
+                    outs[req.rid] = lm_data.decode(out)
+            self._note_round_deltas(es, hits0, saved0, spec0)
         return outs
 
     # ----------------------------------------------------------- protocol --
@@ -174,6 +179,9 @@ class CascadeExtractor(ServedExtractor):
             entry = (i, doc_id, attr, text, count_tokens(text))
             tier = self._route(doc_id, attr, entry[4])
             (small if tier == "small" else target).append(entry)
+        tracer = as_tracer(getattr(self.engine, "tracer", None))
+        tracer.instant("cascade.route", kind="cascade",
+                       small=len(small), target=len(target))
 
         reqs, meta = [], []
         for i, doc_id, attr, text, tokens in small:
@@ -194,6 +202,9 @@ class CascadeExtractor(ServedExtractor):
                 self.stats.escalations += 1
                 self.tier_memo.add((doc_id, attr))
                 target.append((i, doc_id, attr, text, tokens))
+                if tracer.enabled(2):
+                    tracer.instant("cascade.escalate", kind="cascade",
+                                   level=2, doc=str(doc_id), attr=attr)
 
         reqs, meta = [], []
         for i, doc_id, attr, text, tokens in target:

@@ -28,6 +28,7 @@ from dataclasses import dataclass
 
 from repro.data import lm_data
 from repro.data.tokens import count_tokens
+from repro.obs import as_tracer
 from repro.serving.engine import Request, ServingEngine
 
 MAX_PROMPT_TOKENS = 220
@@ -149,31 +150,34 @@ class ServedExtractor:
         window is its admission queue instead."""
         outs = {}
         es = self.engine.stats
+        tracer = as_tracer(getattr(self.engine, "tracer", None))
         hits0, saved0 = es["prefix_hits"], es["prefix_saved_tokens"]
         spec0 = (es["draft_tokens"], es["accepted_tokens"],
                  es["decode_steps_saved"])
-        if self.frontend is not None:
-            outs = self._run_round_frontend(reqs)
+        with tracer.span("extract.round", kind="extract", reqs=len(reqs),
+                         frontend=self.frontend is not None):
+            if self.frontend is not None:
+                outs = self._run_round_frontend(reqs)
+                self._note_round_deltas(es, hits0, saved0, spec0)
+                return outs
+            window = self.engine.queue_depth or len(reqs)
+            for i in range(0, len(reqs), max(window, 1)):
+                chunk = reqs[i:i + max(window, 1)]
+                self.engine.submit_many(chunk)
+                done = self.engine.run()
+                self.stats.batches += 1
+                self.stats.max_batch = max(self.stats.max_batch, len(chunk))
+                for req in chunk:
+                    if req.rid not in done:            # retry cap exceeded
+                        failed = self.engine.failed.get(req.rid)
+                        raise RuntimeError(
+                            f"extraction request {req.rid} failed: "
+                            f"{failed.error if failed else 'not in finished set'}")
+                    out = done[req.rid].out
+                    self.stats.generated_tokens += len(out)
+                    outs[req.rid] = lm_data.decode(out)
             self._note_round_deltas(es, hits0, saved0, spec0)
             return outs
-        window = self.engine.queue_depth or len(reqs)
-        for i in range(0, len(reqs), max(window, 1)):
-            chunk = reqs[i:i + max(window, 1)]
-            self.engine.submit_many(chunk)
-            done = self.engine.run()
-            self.stats.batches += 1
-            self.stats.max_batch = max(self.stats.max_batch, len(chunk))
-            for req in chunk:
-                if req.rid not in done:            # retry cap exceeded
-                    failed = self.engine.failed.get(req.rid)
-                    raise RuntimeError(
-                        f"extraction request {req.rid} failed: "
-                        f"{failed.error if failed else 'not in finished set'}")
-                out = done[req.rid].out
-                self.stats.generated_tokens += len(out)
-                outs[req.rid] = lm_data.decode(out)
-        self._note_round_deltas(es, hits0, saved0, spec0)
-        return outs
 
     def _note_round_deltas(self, es, hits0, saved0, spec0):
         self.stats.prefix_hits += es["prefix_hits"] - hits0

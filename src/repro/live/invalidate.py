@@ -84,6 +84,12 @@ class InvalidationCascade:
         s = self.stats
         s.mutations += 1
         doc_id = record.doc_id
+        with self.session.tracer.span("live.invalidate", kind="live",
+                                      op=record.op, doc=str(doc_id)):
+            self._cascade(doc_id)
+
+    def _cascade(self, doc_id) -> None:
+        s = self.stats
         dropped = self.session.drop_doc_state(doc_id)
         s.cache_entries_dropped += dropped["cache_entries"]
         s.escalations_dropped += dropped["escalations"]

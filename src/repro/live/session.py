@@ -76,6 +76,8 @@ class LiveSession(Session):
             return None
         if any(h._rows for h in self._active):
             self.live_stats["mutations_deferred"] += 1
+            self.tracer.instant("live.mutation_deferred", kind="live",
+                                pending=len(self._pending_mutations))
             return None
         for h in self._active:
             h.gen.close()
@@ -83,10 +85,12 @@ class LiveSession(Session):
             h.acquired.clear()
             h._make_run()
             self.live_stats["query_restarts"] += 1
+            self.tracer.instant("live.query_restart", kind="live", qid=h.qid)
         recs = []
         pending, self._pending_mutations = self._pending_mutations, []
         for op, args, kwargs in pending:
-            recs.append(getattr(self.live, op)(*args, **kwargs))
+            with self.tracer.span("live.mutation", kind="live", op=op):
+                recs.append(getattr(self.live, op)(*args, **kwargs))
             self.live_stats["mutations_applied"] += 1
         return recs
 

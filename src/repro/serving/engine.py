@@ -91,6 +91,8 @@ from repro.models.cache_ops import (PAGE_SINK, PageAllocator,
                                     write_slot)
 from repro.models.config import ModelConfig
 from repro.data import lm_data
+from repro.obs import MetricsRegistry, StatsDict, as_tracer
+from repro.obs.metrics import ENGINE_STATS
 from .prefix_cache import PrefixCache
 from .spec_decode import DraftModelDrafter, PromptLookupDrafter
 
@@ -172,7 +174,8 @@ class ServingEngine:
                  spec_decode="off", spec_k: int = 4, spec_ngram: int = 3,
                  draft_model: Optional[tuple] = None, mesh=None,
                  page_allocator: Optional[PageAllocator] = None,
-                 compilation_cache_dir: Optional[str] = None):
+                 compilation_cache_dir: Optional[str] = None,
+                 tracer=None, metrics=None):
         """queue_depth: optional admission-control bound on queued requests;
         ServedExtractor splits its batch rounds into windows of this size
         (None = unbounded).
@@ -274,16 +277,14 @@ class ServingEngine:
                     f"protocol (draft_round/on_insert/on_free), got "
                     f"{spec_decode!r}")
         self.spec = self.drafter is not None
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "evictions": 0,
-                      "runs": 0, "max_live": 0, "decode_slot_steps": 0,
-                      "prefix_hits": 0, "prefix_saved_tokens": 0,
-                      "prefix_inserts": 0, "truncations": 0, "failures": 0,
-                      "prefill_invocations": 0, "prefill_chunks": 0,
-                      "cow_copies": 0, "kv_bytes_peak": 0,
-                      "prefill_ctx_positions": 0,
-                      "spec_rounds": 0, "draft_tokens": 0,
-                      "accepted_tokens": 0, "decode_steps_saved": 0,
-                      "cancelled": 0, "admission_deferred": 0}
+        # observability (DESIGN.md §19): engine counters live in a typed
+        # MetricsRegistry behind the same dict read/write surface as the
+        # old plain dict — an undeclared key is now a hard schema error.
+        # One registry per engine (shared instruments would double-count
+        # under replica aggregation); `tracer` spans the engine phases.
+        self.tracer = as_tracer(tracer)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = StatsDict(self.metrics, "engine", ENGINE_STATS)
 
         self.cache = init_decode_cache(cfg, slots, max_len)
         self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
@@ -429,6 +430,8 @@ class ServingEngine:
                 sub = expand_snapshot(entry.cache, self.max_len)
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_saved_tokens"] += prefix_len
+                self.tracer.instant("engine.prefix_hit", kind="engine",
+                                    level=2, saved=prefix_len)
             else:
                 # first request of a prefix group: prefill the shared prefix
                 # exactly (state-correct snapshot boundary), then continue
@@ -599,6 +602,8 @@ class ServingEngine:
             self.stats["prefill_chunks"] += 1
             self.stats["prefill_ctx_positions"] += \
                 llen_pad * (n_ctx * ps if has_pool else llen_pad)
+            self.tracer.instant("engine.prefill_chunk", kind="engine",
+                                level=2, tokens=int(true_clen))
             i += true_clen
             lpos += true_clen + extra
         return logits, state, lpos, first
@@ -684,6 +689,8 @@ class ServingEngine:
                     state = dict(entry.cache)
                     self.stats["prefix_hits"] += 1
                     self.stats["prefix_saved_tokens"] += prefix_len
+                    self.tracer.instant("engine.prefix_hit", kind="engine",
+                                        level=2, saved=prefix_len)
             if blocks > len(pages):
                 pages = pages + self._ensure_pages(blocks - len(pages), acquired)
         except PagePoolExhausted:
@@ -1019,6 +1026,8 @@ class ServingEngine:
             req.out.clear()
             req.retries += 1
             self.stats["evictions"] += 1
+            self.tracer.instant("engine.evict", kind="engine", level=2,
+                                rid=req.rid, retries=req.retries)
             if req.retries > req.max_retries:
                 req.error = (f"evicted {req.retries} times "
                              f"(max_retries={req.max_retries})")
@@ -1156,6 +1165,8 @@ class ServingEngine:
             except PagePoolExhausted:
                 if defer_admission and (self.active or self._inserting):
                     self.stats["admission_deferred"] += 1
+                    self.tracer.instant("engine.admission_deferred",
+                                        kind="engine", level=2, rid=req.rid)
                 else:
                     raise
         while self.queue and (budget is None or budget > 0):
@@ -1171,10 +1182,19 @@ class ServingEngine:
                 if defer_admission and (self.active or self._inserting):
                     # backpressure, not failure: decode below frees pages
                     self.stats["admission_deferred"] += 1
+                    self.tracer.instant("engine.admission_deferred",
+                                        kind="engine", level=2, rid=req.rid)
                     break
                 raise
         if self.active:
-            self._spec_step() if self.spec else self._step()
+            if self.tracer.enabled(2):
+                name = "engine.verify_round" if self.spec else \
+                    "engine.decode_step"
+                with self.tracer.span(name, kind="engine", level=2,
+                                      live=len(self.active)):
+                    self._spec_step() if self.spec else self._step()
+            else:
+                self._spec_step() if self.spec else self._step()
         return bool(self.queue or self.active or self._inserting)
 
     def run(self, max_steps: int = 10_000, *, strict: bool = True):
@@ -1183,9 +1203,12 @@ class ServingEngine:
         and, under `strict` (default), `RunTruncated` is raised — partial
         results must never read as complete."""
         self.stats["runs"] += 1
-        while (self.queue or self.active or self._inserting) and max_steps > 0:
-            max_steps -= 1
-            self.step()
+        with self.tracer.span("engine.run", kind="engine",
+                              queued=len(self.queue)):
+            while (self.queue or self.active or self._inserting) and \
+                    max_steps > 0:
+                max_steps -= 1
+                self.step()
         if self.queue or self.active or self._inserting:
             self.stats["truncations"] += 1
             if strict:

@@ -54,6 +54,8 @@ from typing import Optional
 
 from repro.models.cache_ops import PagePoolExhausted
 from repro.data import lm_data
+from repro.obs import MetricsRegistry, StatsDict, as_tracer
+from repro.obs.metrics import FRONTEND_STATS
 
 from .costs import TenantStats
 from .engine import Request
@@ -113,7 +115,7 @@ class ServingFrontend:
                  default_weight: float = 1.0,
                  max_queue: Optional[int] = None,
                  max_prefill_chunks: Optional[int] = None,
-                 clock: str = "ticks"):
+                 clock: str = "ticks", tracer=None, metrics=None):
         """engine: a ServingEngine or ReplicaGroup (duck-typed on the
         non-blocking step API: step/poll/cancel/free_slots/estimate_pages/
         pool_free_pages). The frontend owns admission — the engine's own
@@ -145,10 +147,14 @@ class ServingFrontend:
         self._inflight: dict = {}        # rid -> Ticket (admitted, unresolved)
         self._tickets: dict = {}         # rid -> Ticket (all, for poll())
         self._next_rid = 0
-        self.stats = {"pumps": 0, "submitted": 0, "admitted": 0,
-                      "completed": 0, "failed": 0, "shed": 0, "cancelled": 0,
-                      "timeouts": 0, "deferred": 0, "pool_exhausted_absorbed": 0,
-                      "queue_depth_peak": 0}
+        # observability (DESIGN.md §19): frontend counters live in a typed
+        # registry behind the legacy dict surface; `metrics_text()` serves
+        # the Prometheus exposition. Pass the engine's registry as
+        # `metrics` for one combined exposition (names don't collide).
+        self.tracer = as_tracer(tracer)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = StatsDict(self.metrics, "frontend", FRONTEND_STATS)
+        self._queue_delay = self.metrics.histogram("frontend.queue_delay")
         # max page demand a request may ever pose: the whole pool when empty
         self._pool_total = engine.pool_free_pages()
         self._lock = threading.RLock()
@@ -295,6 +301,9 @@ class ServingFrontend:
         key = {DONE: "completed", FAILED: "failed", SHED: "shed",
                CANCELLED: "cancelled", TIMEOUT: "timeouts"}[status]
         self.stats[key] += 1
+        if status == SHED:
+            self.tracer.instant("frontend.shed", kind="frontend",
+                                rid=t.rid, tenant=t.tenant, reason=reason)
         setattr(ts, key, getattr(ts, key) + 1)
         if status == DONE:
             ts.latency.add(self._now() - (t.submitted_tick if
@@ -367,11 +376,15 @@ class ServingFrontend:
         ts.admitted += 1
         ts.in_flight += 1
         ts.pool_pages_held += t.pages_est
-        ts.queue_wait.add(self._now() - (t.submitted_tick if
-                                         self.clock == "ticks"
-                                         else t.req.submitted_s))
+        wait = self._now() - (t.submitted_tick if self.clock == "ticks"
+                              else t.req.submitted_s)
+        ts.queue_wait.add(wait)
+        self._queue_delay.observe(wait)
         self._inflight[t.rid] = t
         self.stats["admitted"] += 1
+        if self.tracer.enabled(2):
+            self.tracer.instant("frontend.admit", kind="frontend", level=2,
+                                rid=t.rid, tenant=t.tenant, wait=wait)
 
     # ------------------------------------------------------------- pump ---
 
@@ -381,45 +394,50 @@ class ServingFrontend:
         with self._lock:
             self.tick += 1
             self.stats["pumps"] += 1
-            self._expire()
-            cap = self._capacity()
-            headroom = self.engine.pool_free_pages()
-            busy = self._busy()
-            while cap > 0:
-                t = self._peek_next()
-                if t is None:
-                    break
-                if headroom is not None and busy and t.pages_est > headroom:
-                    # keep it queued: live work will release pages — this
-                    # is the "defer" arm of the backpressure state machine
-                    self.stats["deferred"] += 1
-                    break
-                self._dispatch_one(t)
-                cap -= 1
-                if headroom is not None:
-                    headroom -= t.pages_est
-                    busy = True      # an idle engine is busy once fed
-            if self._busy() or any(e.queue for e in self._engines()) or \
-                    (hasattr(self.engine, "engines") and self.engine.queue):
-                try:
-                    self.engine.step(
-                        max_prefill_chunks=self.max_prefill_chunks,
-                        defer_admission=True)
-                except PagePoolExhausted:
-                    # the engine requeued the request at its queue head
-                    # (hardening contract) — absorb, count, retry next pump
-                    self.stats["pool_exhausted_absorbed"] += 1
-            for rid, t in list(self._inflight.items()):
-                req = self.engine.poll(rid)
-                if req is None:
-                    continue
-                if req.done:
-                    self._resolve(t, DONE)
-                elif req.error == "cancelled":
-                    self._resolve(t, CANCELLED)
-                else:
-                    self._resolve(t, FAILED)
-            return self.has_work()
+            with self.tracer.span("frontend.pump", kind="frontend", level=2,
+                                  tick=self.tick):
+                return self._pump_locked()
+
+    def _pump_locked(self) -> bool:
+        self._expire()
+        cap = self._capacity()
+        headroom = self.engine.pool_free_pages()
+        busy = self._busy()
+        while cap > 0:
+            t = self._peek_next()
+            if t is None:
+                break
+            if headroom is not None and busy and t.pages_est > headroom:
+                # keep it queued: live work will release pages — this
+                # is the "defer" arm of the backpressure state machine
+                self.stats["deferred"] += 1
+                break
+            self._dispatch_one(t)
+            cap -= 1
+            if headroom is not None:
+                headroom -= t.pages_est
+                busy = True      # an idle engine is busy once fed
+        if self._busy() or any(e.queue for e in self._engines()) or \
+                (hasattr(self.engine, "engines") and self.engine.queue):
+            try:
+                self.engine.step(
+                    max_prefill_chunks=self.max_prefill_chunks,
+                    defer_admission=True)
+            except PagePoolExhausted:
+                # the engine requeued the request at its queue head
+                # (hardening contract) — absorb, count, retry next pump
+                self.stats["pool_exhausted_absorbed"] += 1
+        for rid, t in list(self._inflight.items()):
+            req = self.engine.poll(rid)
+            if req is None:
+                continue
+            if req.done:
+                self._resolve(t, DONE)
+            elif req.error == "cancelled":
+                self._resolve(t, CANCELLED)
+            else:
+                self._resolve(t, FAILED)
+        return self.has_work()
 
     def pump_until_idle(self, max_pumps: int = 100_000):
         """Synchronous drain (deterministic; what tests and benches use).
@@ -475,3 +493,20 @@ class ServingFrontend:
 
     def tenant_snapshot(self) -> dict:
         return {name: ts.snapshot() for name, ts in self.tenants.items()}
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition: the typed registry (frontend counters,
+        queue-delay histogram, plus engine/session instruments when a shared
+        registry was passed in) followed by per-tenant gauge lines rendered
+        from `tenant_snapshot()` with a `tenant` label."""
+        lines = [self.metrics.exposition().rstrip("\n")]
+        per_tenant = ("queue_depth", "in_flight", "admitted", "completed",
+                      "shed", "timeouts", "cancelled", "pool_pages_held")
+        lines.append("# TYPE repro_frontend_tenant gauge")
+        for tenant in sorted(self.tenants):
+            snap = self.tenants[tenant].snapshot()
+            for key in per_tenant:
+                lines.append(
+                    f'repro_frontend_tenant{{tenant="{tenant}",'
+                    f'stat="{key}"}} {snap[key]}')
+        return "\n".join(lines) + "\n"

@@ -1,0 +1,505 @@
+"""Unified telemetry (DESIGN.md §19): tracing, metrics registry, EXPLAIN
+ANALYZE.
+
+Pins the PR's contract:
+  * metrics: typed instrument semantics (monotone counters, peak gauges,
+    cumulative histograms), schema enforcement (undeclared name = hard
+    error, `check_complete` catches silently-unreported metrics),
+    `StatsDict` compat surface, Prometheus exposition;
+  * tracing: stack nesting produces a well-formed span tree (hypothesis
+    property when available, fixed program otherwise), async begin/end,
+    levels gate emission, Chrome/JSONL exports are valid and — under the
+    tick clock — byte-identical across identical runs on BOTH the oracle
+    and the real served extractor;
+  * parity: rows and ledger token columns are byte-identical with tracing
+    off vs. full (observability must observe, never perturb);
+  * `LatencySeries`: empty-window percentile guard and exact FIFO
+    eviction at window / window+1;
+  * EXPLAIN ANALYZE: `report()` joins per-stage estimated vs. actual
+    selectivity and per-attr token actuals, and refuses unfinished
+    queries.
+"""
+import json
+
+import pytest
+
+from repro.core import Engine, Filter, Query, Session, conj
+from repro.data.corpus import make_swde_corpus, make_wiki_corpus
+from repro.extract import OracleExtractor
+from repro.index.retriever import TwoLevelRetriever
+from repro.obs import (LEVEL_FULL, LEVEL_OFF, LEVEL_PHASES, NULL_TRACER,
+                       SCHEMA, MetricsRegistry, MetricsSchemaError, StatsDict,
+                       TickClock, Tracer, as_tracer, resolve_level,
+                       schema_stem)
+from repro.obs.metrics import ENGINE_STATS
+from repro.serving.costs import LatencySeries
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # container may not ship hypothesis
+    given = settings = st = None
+
+
+@pytest.fixture(scope="module")
+def wiki():
+    return make_wiki_corpus(seed=0)
+
+
+def _players_query():
+    return Query(tables=["players"], select=[("players", "player_name")],
+                 where=conj(Filter("age", ">", 30, table="players"),
+                            Filter("all_stars", ">=", 5, table="players")))
+
+
+# ------------------------------------------------------------ instruments --
+
+
+def test_counter_is_monotone():
+    reg = MetricsRegistry(schema=None)
+    c = reg.counter("x.n")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    c.set_total(9)
+    with pytest.raises(MetricsSchemaError, match="decrease"):
+        c.set_total(3)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_and_peak():
+    reg = MetricsRegistry(schema=None)
+    g = reg.gauge("x.depth")
+    g.set(7)
+    g.set_max(3)            # lower: peak keeps 7
+    assert g.value == 7
+    g.set(2)                # plain set may go down (it is a gauge)
+    assert g.value == 2
+
+
+def test_histogram_cumulative_buckets():
+    reg = MetricsRegistry(schema=None)
+    h = reg.histogram("x.lat", bounds=(1, 10, 100))
+    for v in (0, 1, 5, 50, 5000):
+        h.observe(v)
+    val = h.value
+    assert val["count"] == 5 and val["sum"] == 5056
+    # cumulative le-counts: le=1 gets {0,1}, le=10 adds 5, le=100 adds 50
+    assert val["buckets"] == {"1": 2, "10": 3, "100": 4, "+Inf": 5}
+
+
+def test_registry_schema_enforced():
+    reg = MetricsRegistry()          # repo-wide SCHEMA
+    with pytest.raises(MetricsSchemaError, match="not in the registered"):
+        reg.counter("engine.made_up_counter")
+    with pytest.raises(MetricsSchemaError, match="declared as"):
+        reg.counter("engine.max_live")       # schema says gauge
+    c1 = reg.counter("engine.prefill_tokens")
+    assert reg.counter("engine.prefill_tokens") is c1   # idempotent
+    assert reg.get("engine.prefill_tokens") is c1
+    with pytest.raises(MetricsSchemaError, match="never registered"):
+        reg.get("engine.decode_steps")
+
+
+def test_check_complete_catches_unreported_metric():
+    reg = MetricsRegistry()
+    for key in ENGINE_STATS:
+        if key != "decode_steps":
+            typ = ENGINE_STATS[key][0]
+            getattr(reg, typ)(f"engine.{key}")
+    with pytest.raises(MetricsSchemaError, match="decode_steps"):
+        reg.check_complete("engine.")
+    reg.counter("engine.decode_steps")
+    reg.check_complete("engine.")        # now complete
+
+
+def test_stats_dict_is_registry_backed():
+    reg = MetricsRegistry()
+    stats = StatsDict(reg, "engine", ENGINE_STATS)
+    stats["prefill_tokens"] += 12
+    stats["max_live"] = 3
+    assert stats["prefill_tokens"] == 12
+    assert reg.value("engine.prefill_tokens") == 12
+    with pytest.raises(MetricsSchemaError):
+        stats["made_up"] += 1
+    with pytest.raises(MetricsSchemaError):
+        stats["made_up"]
+    with pytest.raises(MetricsSchemaError, match="decrease"):
+        stats["prefill_tokens"] = 5
+    snap = stats.snapshot()
+    assert snap["prefill_tokens"] == 12 and len(snap) == len(ENGINE_STATS)
+    assert stats == snap                 # dict-compat equality
+    assert "prefill_tokens" in stats and "made_up" not in stats
+
+
+def test_schema_stem_maps_bench_spellings():
+    assert schema_stem("prefill_tokens") == "prefill_tokens"
+    assert schema_stem("prefill_tokens_on") == "prefill_tokens"
+    assert schema_stem("draft_tokens_dp2") == "draft_tokens"
+    assert schema_stem("engine.prefill_tokens") == "engine.prefill_tokens"
+    assert schema_stem("zorblax") is None
+
+
+def test_exposition_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("engine.prefill_tokens").inc(42)
+    reg.gauge("frontend.queue_depth_peak").set(3)
+    h = reg.histogram("frontend.queue_delay")
+    h.observe(2)
+    text = reg.exposition()
+    assert "# TYPE engine_prefill_tokens counter" in text
+    assert "engine_prefill_tokens 42" in text
+    assert "frontend_queue_depth_peak 3" in text
+    assert 'frontend_queue_delay_bucket{le="+Inf"} 1' in text
+    assert "frontend_queue_delay_count 1" in text
+
+
+# ----------------------------------------------------------------- tracer --
+
+
+def test_resolve_level():
+    assert resolve_level("off") == LEVEL_OFF
+    assert resolve_level("phases") == LEVEL_PHASES
+    assert resolve_level("full") == LEVEL_FULL
+    assert resolve_level(2) == LEVEL_FULL
+    with pytest.raises(ValueError):
+        resolve_level("loud")
+    with pytest.raises(ValueError):
+        resolve_level(7)
+
+
+def test_span_nesting_and_parents():
+    tr = Tracer(clock="ticks")
+    with tr.span("outer", kind="a"):
+        with tr.span("inner", kind="b", n=1):
+            tr.instant("tick", kind="c")
+    outer, inner, inst = tr.spans
+    assert outer.parent is None
+    assert inner.parent == outer.sid
+    assert inst.parent == inner.sid and inst.phase == "i"
+    assert outer.t0 < inner.t0 <= inner.t1 < outer.t1
+    assert inner.attrs == {"n": 1}
+
+
+def test_async_begin_end_outlives_stack():
+    tr = Tracer(clock="ticks")
+    sid = tr.begin("query", kind="query", qid=1)
+    with tr.span("step", kind="s"):
+        pass
+    tr.end(sid, rows=3)
+    q = tr.find("query")[0]
+    assert q.phase == "b" and q.parent is None
+    assert q.attrs == {"qid": 1, "rows": 3}
+    assert q.t1 > q.t0
+    tr.end(sid)                      # double-end is a no-op
+    assert tr.begin("off", level=99) == -1
+
+
+def test_levels_gate_emission():
+    tr = Tracer(clock="ticks", level=LEVEL_PHASES)
+    with tr.span("coarse"):
+        with tr.span("fine", level=2):
+            tr.instant("finer", level=2)
+    assert [s.name for s in tr.spans] == ["coarse"]
+    assert not tr.enabled(2) and tr.enabled(1)
+    off = Tracer(clock="ticks", level=0)
+    with off.span("nope"):
+        pass
+    assert off.spans == []
+
+
+def test_exception_leak_closes_stack():
+    tr = Tracer(clock="ticks")
+    with pytest.raises(RuntimeError):
+        with tr.span("outer"):
+            with tr.span("leaked"):
+                raise RuntimeError("boom")
+    assert all(s.t1 is not None for s in tr.spans)
+    assert tr._stack == []           # outer's close popped the leaked span
+
+
+def test_null_tracer_is_inert():
+    assert as_tracer(None) is NULL_TRACER
+    t = Tracer(clock="ticks")
+    assert as_tracer(t) is t
+    with NULL_TRACER.span("x"):
+        NULL_TRACER.instant("y")
+    assert NULL_TRACER.end(NULL_TRACER.begin("z")) is None
+    assert NULL_TRACER.to_jsonl() == "" and not NULL_TRACER.enabled()
+
+
+def test_chrome_export_shape():
+    tr = Tracer(clock="ticks")
+    sid = tr.begin("query", kind="query")
+    with tr.span("round", kind="scheduler", needs=2):
+        tr.instant("hit", kind="engine")
+    tr.end(sid)
+    doc = json.loads(json.dumps(tr.to_chrome()))
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert phases.count("b") == 1 and phases.count("e") == 1
+    assert phases.count("X") == 1 and phases.count("i") == 1
+    x = next(e for e in doc["traceEvents"] if e["ph"] == "X")
+    assert x["name"] == "round" and x["dur"] > 0 and x["args"] == {"needs": 2}
+    assert doc["otherData"]["clock"] == "ticks"
+
+
+def test_jsonl_export_parses_and_orders():
+    tr = Tracer(clock="ticks")
+    with tr.span("a"):
+        tr.instant("b")
+    lines = tr.to_jsonl().splitlines()
+    objs = [json.loads(ln) for ln in lines]
+    assert [o["name"] for o in objs] == ["a", "b"]
+    assert all(o["t1"] is not None for o in objs)
+
+
+# --------------------------------------- span-tree well-formedness (prop) --
+
+
+def _run_program(program):
+    """Execute an op list against a fresh tick tracer; unmatched opens are
+    closed at the end (exports must finalize them)."""
+    tr = Tracer(clock="ticks")
+    ctxs = []
+    for op in program:
+        if op == "open":
+            ctx = tr.span(f"s{len(tr.spans)}", kind="k")
+            ctx.__enter__()
+            ctxs.append(ctx)
+        elif op == "close" and ctxs:
+            ctxs.pop().__exit__(None, None, None)
+        elif op == "instant":
+            tr.instant(f"i{len(tr.spans)}", kind="k")
+    while ctxs:
+        ctxs.pop().__exit__(None, None, None)
+    return tr
+
+
+def _assert_well_formed(tr):
+    spans = {s.sid: s for s in tr.spans}
+    for s in tr.spans:
+        assert s.t1 is not None and s.t1 >= s.t0
+        if s.parent is not None:
+            p = spans[s.parent]
+            assert p.phase == "X"
+            # a child lives strictly inside its parent's interval
+            assert p.t0 < s.t0 and s.t1 < p.t1
+    # siblings never overlap (single-threaded pump)
+    for s in tr.spans:
+        sibs = [c for c in tr.spans
+                if c.parent == s.parent and c.phase == "X"]
+        sibs.sort(key=lambda c: c.t0)
+        for a, b in zip(sibs, sibs[1:]):
+            assert a.t1 < b.t0
+
+
+if st is not None:
+    @settings(max_examples=80, deadline=None)
+    @given(st.lists(st.sampled_from(["open", "close", "instant"]),
+                    max_size=40))
+    def test_span_tree_well_formed_property(program):
+        tr = _run_program(program)
+        _assert_well_formed(tr)
+        # determinism: same program -> byte-identical export
+        assert tr.to_jsonl() == _run_program(program).to_jsonl()
+else:
+    def test_span_tree_well_formed_property():
+        for program in (
+            ["open", "open", "instant", "close", "open", "close", "close"],
+            ["close", "instant", "open", "open", "open", "close"],
+            ["open"] * 7 + ["instant"] + ["close"] * 3,
+            ["instant", "instant"],
+            [],
+        ):
+            tr = _run_program(program)
+            _assert_well_formed(tr)
+            assert tr.to_jsonl() == _run_program(program).to_jsonl()
+
+
+# ---------------------------------------------------------- latency series --
+
+
+def test_latency_series_empty_window_guard():
+    s = LatencySeries(window=4)
+    assert s.percentile(50) is None
+    assert s.mean is None
+    assert s.snapshot() == {"count": 0, "mean": None, "p50": None, "p99": None}
+
+
+def test_latency_series_fifo_eviction_at_window_boundary():
+    s = LatencySeries(window=4)
+    for v in (40, 10, 30, 20):          # exactly `window` samples: all kept
+        s.add(v)
+    assert s.count == 4 and sorted(s._fifo) == s._sorted == [10, 20, 30, 40]
+    assert s.percentile(0) == 10 and s.percentile(100) == 40
+    s.add(25)                           # window+1: oldest (40) evicts, FIFO
+    assert s.count == 5                 # lifetime count keeps the evicted
+    assert s._sorted == [10, 20, 25, 30]
+    assert s.percentile(100) == 30
+    # out-of-range percentiles clamp instead of indexing out of bounds
+    assert s.percentile(-5) == 10 and s.percentile(250) == 30
+
+
+# -------------------------------------------- determinism + parity (oracle) --
+
+
+def _traced_oracle_run(wiki, tracer):
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki),
+                   batch_size=8, tracer=tracer)
+    h = sess.submit(_players_query())
+    return h.result(), h
+
+
+def test_trace_determinism_oracle(wiki):
+    t1 = Tracer(clock="ticks", level=LEVEL_FULL)
+    t2 = Tracer(clock="ticks", level=LEVEL_FULL)
+    _traced_oracle_run(wiki, t1)
+    _traced_oracle_run(wiki, t2)
+    assert t1.spans, "oracle run emitted no spans"
+    assert t1.to_jsonl() == t2.to_jsonl()
+
+
+def test_tracing_parity_oracle(wiki):
+    res_off, _ = _traced_oracle_run(wiki, None)
+    res_on, _ = _traced_oracle_run(wiki, Tracer(clock="ticks",
+                                                level=LEVEL_FULL))
+    key = lambda r: tuple(sorted(r["_docs"].items()))  # noqa: E731
+    assert sorted(map(key, res_off.rows)) == sorted(map(key, res_on.rows))
+    a, b = res_off.ledger, res_on.ledger
+    for col in ("input_tokens", "output_tokens", "llm_calls", "extractions",
+                "per_phase"):
+        assert getattr(a, col) == getattr(b, col), col
+
+
+def test_trace_covers_session_scheduler_layers(wiki):
+    tr = Tracer(clock="ticks", level=LEVEL_FULL)
+    _traced_oracle_run(wiki, tr)
+    names = {s.name for s in tr.spans}
+    assert {"session.query", "session.step", "scheduler.round"} <= names
+    kinds = tr.by_kind()
+    assert kinds["query"]["spans"] >= 1 and kinds["scheduler"]["spans"] >= 1
+
+
+# --------------------------------------------- determinism + parity (served) --
+
+
+def _served_session(corpus, cfg, params, tracer):
+    from repro.extract.served import ServedExtractor
+    from repro.serving.engine import ServingEngine
+    eng = ServingEngine(cfg, params, slots=4, max_len=1024,
+                        prefix_cache=True, tracer=tracer)
+    sess = Session(TwoLevelRetriever(corpus),
+                   ServedExtractor(corpus, eng, max_new=6),
+                   batch_size=4, tracer=as_tracer(tracer))
+    return sess, eng
+
+
+@pytest.fixture(scope="module")
+def served_env():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.data import lm_data
+    from repro.models import init_params
+    full = make_swde_corpus()
+    uni = [d for d in sorted(full.docs) if "universities" in d][:6]
+    corpus = full.subset(uni)
+    cfg = get_smoke_config("qwen2.5-3b").replace(vocab_size=lm_data.VOCAB)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return corpus, cfg, params
+
+
+def _uni_query():
+    return Query(tables=["universities"],
+                 select=[("universities", "university_name")],
+                 where=Filter("tuition", "<", 30000, table="universities"))
+
+
+def test_trace_determinism_and_parity_served(served_env):
+    """One tracer shared by session + engine: two identical runs produce
+    byte-identical JSONL; rows/tokens match the untraced run; the trace
+    covers session -> scheduler -> engine."""
+    corpus, cfg, params = served_env
+    results, traces = [], []
+    for tracer in (Tracer(clock="ticks", level=LEVEL_FULL),
+                   Tracer(clock="ticks", level=LEVEL_FULL), None):
+        sess, eng = _served_session(corpus, cfg, params, tracer)
+        results.append(sess.submit(_uni_query()).result())
+        traces.append(tracer)
+    assert traces[0].to_jsonl() == traces[1].to_jsonl()
+    names = {s.name for s in traces[0].spans}
+    assert {"session.query", "extract.round", "engine.run"} <= names
+    # scheduler coverage: tiny corpora may satisfy every execution need
+    # from the sampling cache (no scheduler.round), but the sampling
+    # chunks themselves are scheduler spans
+    assert {s.kind for s in traces[0].spans} >= {"session", "scheduler",
+                                                "extract", "engine", "query"}
+    key = lambda r: tuple(sorted(r["_docs"].items()))  # noqa: E731
+    on, off = results[0], results[2]
+    assert sorted(map(key, on.rows)) == sorted(map(key, off.rows))
+    for col in ("input_tokens", "output_tokens", "llm_calls", "extractions"):
+        assert getattr(on.ledger, col) == getattr(off.ledger, col), col
+
+
+def test_engine_stats_registry_backed(served_env):
+    corpus, cfg, params = served_env
+    sess, eng = _served_session(corpus, cfg, params, None)
+    sess.submit(_uni_query()).result()
+    assert eng.stats["prefill_tokens"] > 0
+    assert eng.metrics.value("engine.prefill_tokens") == \
+        eng.stats["prefill_tokens"]
+    with pytest.raises(MetricsSchemaError):
+        eng.stats["not_a_stat"] += 1
+    eng.metrics.check_complete("engine.")   # every schema key is reported
+
+
+# ---------------------------------------------------------- EXPLAIN ANALYZE --
+
+
+def test_report_requires_finished_query(wiki):
+    sess = Session(TwoLevelRetriever(wiki), OracleExtractor(wiki))
+    h = sess.submit(_players_query())
+    with pytest.raises(RuntimeError, match="in flight"):
+        h.report()
+    h.result()
+    assert h.report()["qid"] == h.qid
+
+
+def test_report_joins_estimates_with_actuals(wiki):
+    tr = Tracer(clock="ticks", level=LEVEL_FULL)
+    res, h = _traced_oracle_run(wiki, tr)
+    rep = h.report()
+    assert rep["rows"] == len(res.rows)
+    assert rep["totals"]["input_tokens"] == res.ledger.input_tokens
+    (table,) = rep["tables"]
+    assert table["table"] == "players" and table["candidate_docs"] > 0
+    stages = {st_["attr"]: st_ for st_ in table["stages"]}
+    assert set(stages) == {"age", "all_stars"}
+    for st_ in stages.values():
+        assert st_["evaluated"] > 0
+        assert 0.0 <= st_["actual_selectivity"] <= 1.0
+        assert st_["est_selectivity"] is not None
+        assert st_["invocations"] > 0
+        assert st_["actual_tokens"] > 0
+        assert st_["actual_tokens_per_call"] > 0
+    # evaluation counts are internally consistent (escalation retries may
+    # re-evaluate a filter, so `evaluated` can exceed the candidate count)
+    for st_ in table["stages"]:
+        assert st_["passed"] <= st_["evaluated"]
+    assert rep["trace"]["clock"] == "ticks" and rep["trace"]["spans"] > 0
+    text = h.report_text()
+    assert "EXPLAIN ANALYZE" in text and "age" in text
+    assert "est_sel" in text and "act_sel" in text
+
+
+def test_report_per_attr_ledger_actuals(wiki):
+    """Per-attr actuals account for every charge except the sampling
+    phase, whose full-document prompts span all attrs (attr=None there —
+    they report under per_phase['sampling'] instead)."""
+    _, h = _traced_oracle_run(wiki, None)
+    led = h.ledger
+    assert led.per_attr and led.per_attr_calls
+    sampling = led.per_phase.get("sampling", 0)
+    assert sum(led.per_attr.values()) == \
+        led.input_tokens + led.output_tokens - sampling
+    assert 0 < sum(led.per_attr_calls.values()) <= led.llm_calls
